@@ -1,0 +1,52 @@
+"""Shared benchmark utilities + the paper's recorded external baselines."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 2, repeats: int = 5) -> dict:
+    """Median wall time of a jitted callable (block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    arr = np.asarray(times)
+    return {"median_s": float(np.median(arr)), "p99_s": float(np.max(arr)),
+            "mean_s": float(arr.mean()), "n": repeats}
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"
+
+
+# --- Recorded constants from the paper (GPU baselines + cloud pricing) --------
+# These are *external reference points* (paper §7.1, Table 2) — the deficit
+# reproduction is derived arithmetic over them + our measured structure.
+PAPER = {
+    "a100_cuzk_bn254_ops": 7.2e6,
+    "a100_sppark_bn254_ops": 18.4e6,
+    "a100_icicle_m31_ops": 62.15e6,
+    "a100_cudilithium_ntt_ops": 18.3e6,
+    "a100_price": 3.67,
+    "tpu_v4_price_chip": 3.22, "tpu_v4_chips": 4,
+    "tpu_v5e_price_chip": 1.20, "tpu_v5e_chips": 8,
+    "tpu_v5p_price_chip": 4.20, "tpu_v5p_chips": 4,
+    # the paper's measured TPU throughputs (recorded for derived columns)
+    "tpu_v4_bn254_ops": 3663.0,
+    "tpu_v5e_bn254_ops": 2704.0,
+    "tpu_v5p_bn254_ops": 5931.0,
+    "tpu_v5p_bn254_int32_ops": 7014.0,
+    "tpu_v4_dil_ops": 110435.0,
+    "tpu_v5e_dil_ops": 85231.0,
+    "tpu_v5p_dil_ops": 164822.0,
+    "tpu_v4_pointwise_ops": 63000.0,
+    "tpu_v4_vpu_only_ops": 4400.0,
+}

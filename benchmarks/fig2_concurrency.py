@@ -1,0 +1,27 @@
+"""Fig 2 — throughput scaling under concurrency (d=256 Dilithium)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import csv_row, time_fn
+from repro.core import workloads as WK
+from benchmarks.table2_throughput import _rand_dil
+
+
+def run() -> list[str]:
+    eng = WK.make_engine("dilithium", 256)
+    e2e = jax.jit(eng.e2e)
+    out = []
+    base = None
+    for n_s in (1, 2, 4, 8, 16, 32, 64, 128):
+        a = _rand_dil(n_s, 256, seed=n_s)
+        t = time_fn(e2e, a, warmup=1, repeats=3)["median_s"]
+        ops = n_s / t
+        base = base or ops
+        out.append(csv_row(f"fig2.concurrency_ns{n_s}", t * 1e6 / n_s,
+                           f"ops_per_s={ops:.0f} scaling={ops/base:.1f}x"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,72 @@
+"""Fig 3 — algorithmic crossover scan: O(d²) matrix-form NTT vs O(d log d)
+Cooley–Tukey, plus the U_eff utilisation model (paper §5.2).
+
+Both algorithms run live in JAX on a single 31-bit BN254 ERNS channel (the
+per-channel cost is identical across the 9 channels, so per-channel timing ×9
+is the full-pipeline pointwise cost — noted in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, time_fn
+from repro.core import limb_gemm as G
+from repro.core import ntt as NTT
+from repro.core import primes as P
+
+
+def run(max_log2_d: int = 12) -> list[str]:
+    m = P.ntt_friendly_primes(9, 17)[0]
+    out = []
+    rng = np.random.default_rng(0)
+    t_mat_by_d = {}
+    for ld in range(8, max_log2_d + 1):
+        d = 1 << ld
+        a = jnp.asarray(np.asarray(
+            rng.integers(0, m, (1, d), dtype=np.uint64), np.uint32))
+        # matrix-form via the limb pipeline (per-plane mode for big d)
+        w = NTT.ntt_matrix(d, m)
+        plan = G.make_channel_plan(w, m, data_limbs=4, tw_limbs=4,
+                                   fuse_below=1025)
+        mat = jax.jit(lambda x, p=plan: G.staged_transform(x, p)[0])
+        t_mat = time_fn(mat, a, warmup=1, repeats=3)["median_s"]
+        # Cooley–Tukey O(d log d)
+        ct = jax.jit(lambda x: NTT.cooley_tukey_ntt(x, m))
+        t_ct = time_fn(ct, a, warmup=1, repeats=3)["median_s"]
+        p_algo = math.log2(d) / d
+        t_mat_by_d[d] = t_mat
+        out.append(csv_row(
+            f"fig3.crossover_d{d}", t_mat * 1e6,
+            f"matrix_ops={1/t_mat:.1f} ct_ops={1/t_ct:.1f} "
+            f"ratio={t_mat/t_ct:.1f}x P_algo={p_algo:.4f} "
+            f"U_eff={0.92*p_algo*100:.2f}%"))
+    # O(d²) scaling-law extrapolation to the paper's 2^14 endpoint, with the
+    # law validated on the measured range first:
+    ds = sorted(t_mat_by_d)
+    if len(ds) >= 3:
+        ratio = t_mat_by_d[ds[-1]] / t_mat_by_d[ds[-2]]
+        out.append(csv_row(
+            "fig3.scaling_law_check", 0.0,
+            f"t(d)/t(d/2)={ratio:.2f} (O(d²) predicts 4.0)"))
+        d_top = ds[-1]
+        for d in (2 * d_top, 4 * d_top):
+            if d > 16384:
+                break
+            t_ext = t_mat_by_d[d_top] * (d / d_top) ** 2
+            out.append(csv_row(
+                f"fig3.crossover_d{d}_extrapolated", t_ext * 1e6,
+                f"matrix_ops={1/t_ext:.2f} P_algo={math.log2(d)/d:.5f} "
+                f"(O(d²) law extension; no crossover — gap widens)"))
+    # the paper's d=256 headline utilisation model
+    out.append(csv_row("fig3.ueff_model_d256", 0.0,
+                       f"P_algo={8/256:.4f} S_mxu>=0.92 "
+                       f"U_eff={0.92*8/256*100:.1f}% paper=2.8%"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

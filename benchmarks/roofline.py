@@ -1,0 +1,83 @@
+"""§Roofline — aggregate the dry-run artifacts into the roofline table.
+
+Reads artifacts/dryrun/*.json (produced by repro.launch.dryrun) and prints,
+per (arch × shape × mesh): the three roofline terms, the dominant bottleneck,
+MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE), and the useful-compute
+ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv_row
+from repro.configs import ARCHS, SHAPES
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts", "dryrun")
+
+
+def active_params(cfg) -> int:
+    total = cfg.params_count()
+    if not cfg.n_experts:
+        return total
+    expert = cfg.n_experts * 3 * cfg.d_model * cfg.d_ff * cfg.n_layers
+    active = cfg.top_k * 3 * cfg.d_model * cfg.d_ff * cfg.n_layers
+    return total - expert + active
+
+
+def model_flops_for(rec) -> float:
+    arch = rec["arch"]
+    if arch.startswith("aegis_"):
+        # matrix-form transform: 2·d²·rows limb-level MACs aren't "model
+        # flops"; use the algorithmic O(d log d) useful work as the reference
+        import math
+        d, rows = rec["d"], rec["rows"]
+        chans = 9 if "bn254" in arch else 1
+        return 2.0 * rows * d * math.log2(d) * chans
+    cfg = ARCHS[arch]
+    n = active_params(cfg)
+    mult = 6.0 if rec.get("kind") == "train" else 2.0
+    return mult * n * rec.get("tokens", 0)
+
+
+def rows(pattern: str = "*.json") -> list[str]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ART, pattern))):
+        rec = json.load(open(path))
+        name = f"roofline.{rec['arch']}.{rec['shape']}.{rec['mesh']}"
+        if rec["status"] == "skipped":
+            out.append(csv_row(name, 0.0, f"SKIP [{rec['reason'][:60]}]"))
+            continue
+        if rec["status"] != "ok":
+            out.append(csv_row(name, 0.0, f"ERROR {rec.get('error','')[:80]}"))
+            continue
+        r = rec["roofline"]
+        n_chips = 1
+        for x in rec["mesh"].split("x"):
+            n_chips *= int(x)
+        mf = model_flops_for(rec)
+        hlo_total = r["flops_per_chip"] * n_chips
+        ratio = mf / hlo_total if hlo_total else 0.0
+        bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        frac = r["t_compute_s"] / bound if bound else 0.0
+        out.append(csv_row(
+            name, bound * 1e6,
+            f"t_comp={r['t_compute_s']:.3e} t_mem={r['t_memory_s']:.3e} "
+            f"t_coll={r['t_collective_s']:.3e} dom={r['dominant']} "
+            f"roofline_frac={frac:.3f} model/hlo_flops={ratio:.3f} "
+            f"bytes_per_dev={rec.get('bytes_per_device',0)/1e9:.1f}GB"))
+    return out
+
+
+def run() -> list[str]:
+    got = rows()
+    if not got:
+        return [csv_row("roofline.missing", 0.0,
+                        "no dry-run artifacts; run repro.launch.dryrun first")]
+    return got
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,52 @@
+"""Benchmark aggregator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--only table2`` selects a subset;
+``--fast`` trims the heavy sweeps (crossover capped at d=2048).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (table1_accumulator, table2_throughput,
+                            table3_temporal, table4_ablation,
+                            table5_heterogeneous, fig2_concurrency,
+                            fig3_crossover, roofline)
+
+    suites = {
+        "table1": table1_accumulator.run,
+        "table2": table2_throughput.run,
+        "table3": table3_temporal.run,
+        "table4": table4_ablation.run,
+        "table5": table5_heterogeneous.run,
+        "fig2": fig2_concurrency.run,
+        "fig3": (lambda: fig3_crossover.run(max_log2_d=11)) if args.fast
+                else fig3_crossover.run,
+        "roofline": roofline.run,
+    }
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in suites.items():
+        if args.only and name not in args.only.split(","):
+            continue
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception:  # noqa: BLE001
+            failed += 1
+            print(f"{name}.FAILED,0,{traceback.format_exc(limit=1).splitlines()[-1]}",
+                  flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

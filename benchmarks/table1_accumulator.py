@@ -1,0 +1,27 @@
+"""Table 1 — empirical accumulator precision limits (fp32-mantissa vs int32)."""
+from __future__ import annotations
+
+from repro.core import accumulator as ACC
+from benchmarks.common import csv_row
+
+
+def run() -> list[str]:
+    rows = ACC.table1_rows()
+    paper_v4 = [True, True, True, False, False, False, False]
+    paper_v5 = [True] * 7
+    out = []
+    v4 = rows["tpu_v4_fp32_mantissa"]
+    v5 = rows["tpu_v5_int32_native"]
+    out.append(csv_row(
+        "table1.fp32_mantissa_model", 0.0,
+        f"probes={''.join('T' if x else 'F' for x in v4)} "
+        f"matches_paper_v4={v4 == paper_v4}"))
+    out.append(csv_row(
+        "table1.int32_native_model", 0.0,
+        f"probes={''.join('T' if x else 'F' for x in v5)} "
+        f"matches_paper_v5={v5 == paper_v5}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,144 @@
+"""Table 2 — cost-normalised throughput, Π diagnostics, κ amortisation and the
+headline deficit factorisation.
+
+This-hardware numbers are CPU measurements of our pipeline; the GPU/TPU
+columns are the paper's recorded constants; the *derived* quantities
+(ops/$, deficits, Π, κ, arithmetic-vs-spatial factorisation) reproduce the
+paper's arithmetic over both.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import PAPER, csv_row, time_fn
+from repro.core import validator as V
+from repro.core import workloads as WK
+
+N_C = 8
+D = 256
+
+
+def _rand_dil(n, d, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(np.asarray(
+        rng.integers(0, 8380417, (n, d), dtype=np.uint64), np.uint32))
+
+
+def _rand_bn(eng, n, d, seed=0):
+    rng = np.random.default_rng(seed)
+    res = np.zeros((n, d, eng.n_channels), np.uint32)
+    for ci, m in enumerate(eng.chain.moduli):
+        res[..., ci] = rng.integers(0, m, (n, d), dtype=np.uint64).astype(np.uint32)
+    return jnp.asarray(res)
+
+
+def run() -> list[str]:
+    out = []
+
+    # --- our measured throughput (this hardware: CPU) -------------------------
+    dil = WK.make_engine("dilithium", D)
+    a_d = _rand_dil(N_C, D)
+    e2e_d = jax.jit(dil.e2e)
+    t = time_fn(e2e_d, a_d)
+    dil_ops = N_C / t["median_s"]
+    out.append(csv_row("table2.dilithium_e2e_cpu", t["median_s"] * 1e6 / N_C,
+                       f"ops_per_s={dil_ops:.0f} batch={N_C} d={D}"))
+
+    bn = WK.make_engine("bn254", D)
+    a_b = _rand_bn(bn, N_C, D)
+    e2e_b = jax.jit(bn.e2e)
+    t_total = time_fn(e2e_b, a_b)
+    bn_ops = N_C / t_total["median_s"]
+    out.append(csv_row("table2.bn254_e2e_cpu", t_total["median_s"] * 1e6 / N_C,
+                       f"ops_per_s={bn_ops:.0f} batch={N_C} d={D}"))
+
+    ev_b = jax.jit(bn.evaluate)
+    t_gemm = time_fn(ev_b, a_b)
+    y = ev_b(a_b)
+    red_b = jax.jit(bn.reduce)
+    t_red = time_fn(red_b, y)
+    pi = t_total["median_s"] / t_gemm["median_s"]
+    out.append(csv_row("table2.bn254_pointwise_cpu",
+                       t_gemm["median_s"] * 1e6 / N_C,
+                       f"ops_per_s={N_C/t_gemm['median_s']:.0f}"))
+    out.append(csv_row("table2.pi_vpu_penalty", t_red["median_s"] * 1e6 / N_C,
+                       f"PI_ours={pi:.1f} PI_paper=17.2 "
+                       f"paper_check={PAPER['tpu_v4_bn254_ops']:.0f}*"
+                       f"{1/PAPER['tpu_v4_pointwise_ops']*1e6:.1f}us"))
+
+    # int32-native sensitivity (v5p path)
+    bn_i32 = WK.make_engine("bn254", D, accum="int32_native")
+    t_i32 = time_fn(jax.jit(bn_i32.e2e), a_b)
+    gain = t_total["median_s"] / t_i32["median_s"]
+    paper_gain = PAPER["tpu_v5p_bn254_int32_ops"] / PAPER["tpu_v5p_bn254_ops"]
+    out.append(csv_row("table2.bn254_int32_native_cpu",
+                       t_i32["median_s"] * 1e6 / N_C,
+                       f"speedup_ours={gain:.2f} paper=1.183"))
+
+    # --- κ: static fold census, eager vs lazy (MORPH discipline) --------------
+    # matched staging windows (d_max=171 both) so only the reduction
+    # discipline differs — the paper's 1764-vs-392 node-count experiment.
+    from repro.core import field as FLD
+    from repro.core import limb_gemm as G
+    from repro.core import ntt as NTT
+    d_k = 1024
+    w_k = NTT.ntt_matrix(d_k, FLD.DILITHIUM_Q, negacyclic=True)
+    plan_k = G.make_channel_plan(w_k, FLD.DILITHIUM_Q, data_limbs=3,
+                                 tw_limbs=3, accum="int32_native")
+    a_k = _rand_dil(2, d_k)
+    c_e = V.fold_census(
+        lambda x: G.staged_transform(x, plan_k, reduction="eager",
+                                     d_max=171)[0], a_k)
+    c_l = V.fold_census(
+        lambda x: G.staged_transform(x, plan_k, reduction="lazy",
+                                     d_max=171)[0], a_k)
+    kappa = (c_e["n_fold_scopes"] / max(c_l["n_fold_scopes"], 1))
+    out.append(csv_row("table2.kappa_lazy_amortisation", 0.0,
+                       f"eager_folds={c_e['n_fold_scopes']} "
+                       f"lazy_folds={c_l['n_fold_scopes']} "
+                       f"kappa_ours={kappa:.1f} (=n_passes at d=1024) "
+                       f"kappa_paper=4.5"))
+
+    # --- recorded-constant cost table + deficits (paper reproduction) ---------
+    rows = {
+        "a100_bn254": (PAPER["a100_cuzk_bn254_ops"], PAPER["a100_price"]),
+        "v4_bn254": (PAPER["tpu_v4_bn254_ops"],
+                     PAPER["tpu_v4_price_chip"] * PAPER["tpu_v4_chips"]),
+        "v5e_bn254": (PAPER["tpu_v5e_bn254_ops"],
+                      PAPER["tpu_v5e_price_chip"] * PAPER["tpu_v5e_chips"]),
+        "v5p_bn254": (PAPER["tpu_v5p_bn254_ops"],
+                      PAPER["tpu_v5p_price_chip"] * PAPER["tpu_v5p_chips"]),
+        "v5p_bn254_int32": (PAPER["tpu_v5p_bn254_int32_ops"],
+                            PAPER["tpu_v5p_price_chip"] * PAPER["tpu_v5p_chips"]),
+        "a100_dil": (PAPER["a100_cudilithium_ntt_ops"], PAPER["a100_price"]),
+        "v4_dil": (PAPER["tpu_v4_dil_ops"],
+                   PAPER["tpu_v4_price_chip"] * PAPER["tpu_v4_chips"]),
+        "v5p_dil": (PAPER["tpu_v5p_dil_ops"],
+                    PAPER["tpu_v5p_price_chip"] * PAPER["tpu_v5p_chips"]),
+    }
+    eff = {k: ops / price for k, (ops, price) in rows.items()}
+    deficits = {
+        "v4_bn254": eff["a100_bn254"] / eff["v4_bn254"],        # paper ~6908
+        "v5p_bn254": eff["a100_bn254"] / eff["v5p_bn254"],      # paper ~5558
+        "v5p_bn254_int32": eff["a100_bn254"] / eff["v5p_bn254_int32"],  # ~4693
+        "v4_dil": eff["a100_dil"] / eff["v4_dil"],              # paper ~582
+        "v5p_dil": eff["a100_dil"] / eff["v5p_dil"],            # paper ~508
+    }
+    for k, v in deficits.items():
+        out.append(csv_row(f"table2.deficit_{k}", 0.0, f"deficit={v:.0f}x"))
+
+    # analytical factorisation: arithmetic × spatial(5.19) ≈ headline
+    spatial = 5.19
+    arith_v4 = deficits["v4_bn254"] / spatial     # paper ~1331
+    arith_v5p = deficits["v5p_bn254"] / spatial   # paper ~1071
+    out.append(csv_row(
+        "table2.factorisation", 0.0,
+        f"arith_v4={arith_v4:.0f}x arith_v5p={arith_v5p:.0f}x spatial=5.19x "
+        f"recompose_v4={arith_v4*spatial:.0f} recompose_v5p={arith_v5p*spatial:.0f}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

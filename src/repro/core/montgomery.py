@@ -1,0 +1,68 @@
+"""Digit-12 Montgomery REDC (the eager "VPU Montgomery reduction" phase).
+
+CIOS-style REDC over β = 2**12 digits: ``redc_digits(Y)`` returns the
+canonical digit representation of Y·β^{-nred} mod p.  Combined with the
+Montgomery-corrected CRT accumulation in :func:`repro.core.rns.rns_to_field`,
+the β^{nred} factors cancel and the output is exactly X mod p.
+
+Every intermediate stays < 2**25 (digit products < 2**24 + carries), i.e.
+inside the int32 exactness window — the wide-ALU-free discipline the paper
+measures.  This is deliberately a long serial dependency chain of elementwise
+vector ops: the structurally-mandated VPU bottleneck (paper Table 3).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import wordarith as W
+
+
+def redc_digits(y_digits, chain):
+    """y_digits: uint32 (..., ny) canonical digit-12 (ny >= nred + 2).
+
+    Returns uint32 (..., nred) canonical digits of Y·β^{-nred} mod p.
+    """
+    n = chain.n_red_digits
+    p_dig = [int(x) for x in chain.p_digits]
+    p_prime = jnp.uint32(chain.p_prime)
+    mask = jnp.uint32(W.DIGIT_MASK)
+
+    ny = y_digits.shape[-1]
+    t = [y_digits[..., j].astype(jnp.uint32) for j in range(ny)]
+
+    for _ in range(n):
+        q = (t[0] * p_prime) & mask                      # < 2^12
+        # t = (t + q·p) >> (one digit); running carry < 2^13
+        carry = (t[0] + q * jnp.uint32(p_dig[0])) >> jnp.uint32(W.BETA_BITS)
+        for j in range(1, ny):
+            pj = p_dig[j] if j < n else 0
+            acc = t[j] + q * jnp.uint32(pj) + carry      # < 2^25
+            t[j - 1] = acc & mask
+            carry = acc >> jnp.uint32(W.BETA_BITS)
+        t[ny - 1] = carry
+
+    out = jnp.stack(t[:n], axis=-1)
+    # REDC bound: result < 2p (top digits beyond nred are zero by range).
+    return W.cond_subtract(out, jnp.asarray(chain.p_digits))
+
+
+def digits_to_words_u32(digits):
+    """(..., nd) digit-12 -> (..., ceil(nd·12/32)) uint32 words (output form)."""
+    nd = digits.shape[-1]
+    total_bits = nd * W.BETA_BITS
+    n_words = (total_bits + 31) // 32
+    out = []
+    d = digits.astype(jnp.uint32)
+    for w in range(n_words):
+        lo_bit = 32 * w
+        acc = jnp.zeros(digits.shape[:-1], jnp.uint32)
+        for j in range(nd):
+            b = j * W.BETA_BITS - lo_bit
+            if -W.BETA_BITS < b < 32:
+                if b >= 0:
+                    acc = acc | ((d[..., j] << jnp.uint32(b))
+                                 if b else d[..., j])
+                else:
+                    acc = acc | (d[..., j] >> jnp.uint32(-b))
+        out.append(acc)
+    return jnp.stack(out, axis=-1)

@@ -1,0 +1,17 @@
+"""Aegis two-tier scheduling (paper §4).
+
+Tier 1 — :mod:`rectangular`: degree-bucketed dense row-stacking of tenant
+polynomials into ``N_c × d̂_max`` operands (no block-diagonal structural
+zeros), with the paper's packing metrics (batch fill, padding waste, staging
+overhead, M/K-dimension occupancy).
+
+Tier 2 — :mod:`coscheduler`: slice-level dispatch of workload-homogeneous
+batches onto disjoint device groups (Dilithium next to BN254 concurrently),
+with workload-zone tags carried into the HLO for the post-hoc validator.
+
+:mod:`queue` — ingress queue + Poisson trace synthesis (paper §7.4).
+"""
+from repro.core.scheduler.queue import TenantRequest, PoissonTrace, IngressQueue
+from repro.core.scheduler.rectangular import (RectangularScheduler,
+                                              StackedBatch, packing_metrics)
+from repro.core.scheduler.coscheduler import SliceCoScheduler

@@ -1,0 +1,213 @@
+"""Post-hoc Structural HLO Validator (paper §6.3).
+
+Intercepts the lowered + compiled module just prior to dispatch and statically
+asserts the separation invariants against the *stock* XLA output:
+
+  V1 (Invariant 5.1, strict reduction ordering): within each staged transform,
+      every pass-k VPU fold is emitted after pass-k's MXU dot and before
+      pass-(k+1)'s MXU dot — no reduction inside an open summation window.
+  V2 (barrier survival): the lowered module carries one
+      ``optimization_barrier`` per adjacent staging-pass pair.
+  V3 (workload-zone fusion separation): no fused computation in the optimized
+      HLO mixes ops from two distinct ``wzone_*`` scopes.
+  V4 (precision-zone homogeneity): no fused computation mixes distinct
+      ``pzone_*`` scopes (e.g. 3-limb Dilithium with 4-limb BN254 blocks).
+  V5 (disjoint addressing): no input/output buffer donation aliases tensors
+      across distinct workload zones.
+
+Any violation raises :class:`ValidationError` (dispatch abort) and carries the
+offending subgraph snippet for triage.  The validator also returns the static
+op census (dots, folds, barriers) used for the κ lazy-amortisation analysis
+(paper §7.2.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import jax
+
+WZONE_RE = re.compile(r"wzone_[A-Za-z0-9_]+")
+PZONE_RE = re.compile(r"pzone_[A-Za-z0-9_]+")
+PASS_RE = re.compile(r"staging_pass_(\d+)")
+OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+class ValidationError(AssertionError):
+    def __init__(self, violations):
+        self.violations = violations
+        super().__init__("HLO structural validation failed:\n" +
+                         "\n".join(f"  [{v[0]}] {v[1]}" for v in violations))
+
+
+@dataclasses.dataclass
+class ValidationReport:
+    ok: bool
+    violations: list
+    n_barriers: int
+    n_dots: int
+    n_folds: int
+    zones: set
+    precision_zones: set
+
+    def raise_if_failed(self):
+        if not self.ok:
+            raise ValidationError(self.violations)
+
+
+def _entry_computation(hlo_text: str) -> str:
+    """The ENTRY computation block of an optimized HLO module."""
+    idx = hlo_text.find("ENTRY ")
+    return hlo_text[idx:] if idx >= 0 else hlo_text
+
+
+def _fusion_blocks(hlo_text: str) -> list[str]:
+    """All non-entry computation bodies (fused computations and callees)."""
+    blocks, cur, inside = [], [], False
+    for line in hlo_text.splitlines():
+        if line.startswith("%") and line.rstrip().endswith("{"):
+            inside, cur = True, [line]
+        elif inside and line.startswith("}"):
+            cur.append(line)
+            blocks.append("\n".join(cur))
+            inside = False
+        elif inside:
+            cur.append(line)
+    return blocks
+
+
+def validate_module(lowered_text: str, compiled_text: str, *,
+                    expected_passes: int | None = None,
+                    expect_eager: bool = True) -> ValidationReport:
+    violations = []
+
+    # --- V2: barrier survival in the lowered module --------------------------
+    n_barriers = len(re.findall(r"optimization_barrier", lowered_text))
+    if expect_eager and expected_passes and expected_passes > 1:
+        want = expected_passes - 1
+        if n_barriers < want:
+            violations.append((
+                "V2", f"{n_barriers} optimization_barriers for "
+                f"{expected_passes} staging passes (need >= {want})"))
+
+    # --- V1: strict reduction ordering (program order of the traced module) --
+    # The lowered StableHLO preserves trace emission order (no hoisting yet):
+    # between any two consecutive MXU summation windows (dot_general / pallas
+    # kernel calls) there must be >= 1 modular-reduction op (stablehlo.remainder
+    # from the fold) — i.e. no reduction is deferred into the next open
+    # summation, and no summation starts before the previous fold ran.
+    low_lines = lowered_text.splitlines()
+    dot_pat = re.compile(
+        r"stablehlo\.dot_general|stablehlo\.custom_call.*(tpu_custom_call|pallas)")
+    # resolve the MLIR loc table (debug_info=True) so only *pointwise-phase*
+    # dots count as summation windows — the Montgomery/base-extension digit
+    # matmuls legitimately run fold-free (they ARE the reduction).
+    loc_names = dict(re.findall(r'^(#loc\d+) = loc\("([^"]*)"', lowered_text,
+                                re.M))
+    has_locs = bool(loc_names)
+
+    def _window_key(ln: str):
+        """None if not a pointwise dot; else the summation-window scope key
+        (channel_i/staging_pass_k) — several partial-product dots inside one
+        pass share a window."""
+        if not dot_pat.search(ln):
+            return None
+        if not has_locs:
+            return "?"
+        m = re.search(r"loc\((#loc\d+)\)", ln)
+        name = loc_names.get(m.group(1), "") if m else ""
+        if m and name and "mxu_pointwise" not in name:
+            return None  # Montgomery/base-extension matmul — not a window
+        wm = re.search(r"((channel_\d+/)?staging_pass_\d+)", name)
+        return wm.group(1) if wm else (name or "?")
+
+    dots = [(i, _window_key(ln)) for i, ln in enumerate(low_lines)]
+    dots = [(i, k) for i, k in dots if k is not None]
+    rem_idx = [i for i, ln in enumerate(low_lines)
+               if "stablehlo.remainder" in ln or "call @remainder" in ln]
+    barrier_idx = [i for i, ln in enumerate(low_lines)
+                   if "optimization_barrier" in ln]
+    if expect_eager and len(dots) > 1:
+        for (a, ka), (b, kb) in zip(dots, dots[1:]):
+            if ka == kb:
+                continue  # same summation window (multi-plane partials)
+            n_rem = sum(1 for r in rem_idx if a < r < b)
+            if n_rem == 0:
+                violations.append((
+                    "V1", f"no VPU reduction between summation windows "
+                    f"{ka}→{kb} at lowered lines {a}..{b} (open-summation "
+                    f"fold violation)"))
+
+    # --- census over the optimized entry computation --------------------------
+    entry = _entry_computation(compiled_text)
+    dots, folds = [], []
+    for i, ln in enumerate(entry.splitlines()):
+        mo = OPNAME_RE.search(ln)
+        if not mo:
+            continue
+        op_name = mo.group(1)
+        if "mxu_pointwise" in op_name and ("dot" in ln or "fusion" in ln):
+            dots.append(i)
+        if "vpu_fold" in op_name:
+            folds.append(i)
+
+    # --- V3/V4: fusion zone separation ---------------------------------------
+    zones_seen, pzones_seen = set(), set()
+    for block in _fusion_blocks(compiled_text) + [entry]:
+        is_fusion = block.lstrip().startswith("%fused")
+        wz = set(WZONE_RE.findall(block))
+        pz = set(PZONE_RE.findall(block))
+        zones_seen |= wz
+        pzones_seen |= pz
+        if is_fusion:
+            if len(wz) > 1:
+                violations.append((
+                    "V3", f"fused computation mixes workload zones {sorted(wz)}: "
+                    f"{block.splitlines()[0][:120]}"))
+            if len(pz) > 1:
+                violations.append((
+                    "V4", f"fused computation mixes precision zones {sorted(pz)}:"
+                    f" {block.splitlines()[0][:120]}"))
+
+    # --- V5: no cross-zone buffer donation ------------------------------------
+    alias = re.findall(r"input_output_alias=\{[^}]*\}", compiled_text)
+    if alias and len(zones_seen) > 1:
+        # donation is allowed, but only within a single-zone module
+        violations.append((
+            "V5", f"buffer donation present in a multi-zone module: {alias[0][:120]}"))
+
+    return ValidationReport(
+        ok=not violations, violations=violations, n_barriers=n_barriers,
+        n_dots=len(dots), n_folds=len(folds), zones=zones_seen,
+        precision_zones=pzones_seen)
+
+
+def validate_fn(fn, *args, expected_passes: int | None = None,
+                expect_eager: bool = True, donate_argnums=()) -> ValidationReport:
+    """Lower + compile ``fn`` and run the structural validator on both texts."""
+    lowered = jax.jit(fn, donate_argnums=donate_argnums).lower(*args)
+    compiled = lowered.compile()
+    try:
+        low_txt = lowered.as_text(debug_info=True)
+    except TypeError:  # older jax
+        low_txt = lowered.as_text()
+    return validate_module(low_txt, compiled.as_text(),
+                           expected_passes=expected_passes,
+                           expect_eager=expect_eager)
+
+
+def fold_census(fn, *args) -> dict:
+    """Static op census for the κ analysis (paper §7.2.1): counts distinct
+    VPU-fold scheduling sites in the compiled module — one per staging pass
+    under the eager discipline, one total under the lazy/MORPH discipline."""
+    lowered = jax.jit(fn).lower(*args)
+    compiled = lowered.compile()
+    rep = validate_module(lowered.as_text(), compiled.as_text(),
+                          expect_eager=False)
+    txt = compiled.as_text()
+    pass_folds = set(re.findall(r"staging_pass_(\d+)/vpu_fold", txt))
+    n_lazy = 1 if "vpu_fold_lazy" in txt else 0
+    n_fold_ops = len(re.findall(r"vpu_fold", txt))
+    return {"n_dots": rep.n_dots,
+            "n_fold_scopes": len(pass_folds) + n_lazy,
+            "n_fold_tagged_ops": n_fold_ops, "n_barriers": rep.n_barriers}

@@ -1,0 +1,144 @@
+"""Multi-word exact integer arithmetic in base β = 2**12 ("digit-12").
+
+The TPU VPU has no 64-bit integer ALU: every wide operation must decompose
+into lanes whose products and partial sums stay inside the int32 window — the
+architectural constraint the paper characterises.  We use 12-bit digits so a
+digit product is < 2**24 and dozens of them accumulate in int32 without
+carry interruptions; carries are then normalised in a handful of vectorised
+passes.  (The MXU-side path uses 8-bit limbs — see limb_gemm — this module is
+the VPU-side complement used by the Montgomery/base-extension phase.)
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+BETA_BITS = 12
+BETA = 1 << BETA_BITS
+DIGIT_MASK = BETA - 1
+
+
+# --- Host-side (Python bignum) conversions -----------------------------------
+
+
+def int_to_digits(x: int, n: int) -> np.ndarray:
+    if x < 0:
+        raise ValueError("negative")
+    out = np.zeros(n, np.uint32)
+    for j in range(n):
+        out[j] = x & DIGIT_MASK
+        x >>= BETA_BITS
+    if x:
+        raise ValueError(f"{n} digits insufficient")
+    return out
+
+
+def digits_to_int(d: np.ndarray) -> int:
+    x = 0
+    for j in range(len(d) - 1, -1, -1):
+        x = (x << BETA_BITS) + int(d[j])
+    return x
+
+
+def digits_to_int_batch(d: np.ndarray) -> np.ndarray:
+    """(..., n) digit arrays -> object array of Python ints."""
+    flat = d.reshape(-1, d.shape[-1])
+    out = np.array([digits_to_int(row) for row in flat], object)
+    return out.reshape(d.shape[:-1])
+
+
+# --- Device-side helpers ------------------------------------------------------
+
+
+def u32_to_digits(x, n: int):
+    """uint32 [...] -> (..., n) uint32 digit-12 planes."""
+    x = x.astype(jnp.uint32)
+    return jnp.stack(
+        [(x >> jnp.uint32(BETA_BITS * t)) & jnp.uint32(DIGIT_MASK) for t in range(n)],
+        axis=-1,
+    )
+
+
+def normalize_digits(d, passes: int = 6):
+    """int32 (..., n) possibly-denormal digits -> uint32 canonical digits.
+
+    Each pass moves carries one step up while dividing their magnitude by β;
+    starting magnitudes < 2**30 vanish within 4 passes (6 for safety margin).
+    The represented integer must be non-negative.
+    """
+    d = d.astype(jnp.int32)
+    beta = jnp.int32(BETA)
+    for _ in range(passes):
+        q = jnp.floor_divide(d, beta)          # python-style floor for negatives
+        r = d - q * beta                        # in [0, β)
+        carry = jnp.pad(q, [(0, 0)] * (d.ndim - 1) + [(1, 0)])[..., :-1]
+        d = r + carry
+    return d.astype(jnp.uint32)
+
+
+def scalar_conv_accumulate(scalars, const_digits, out_digits: int):
+    """Σ_i scalars[..., i] · const_i as denormal digit-12 planes.
+
+    scalars: uint32 (..., k), each < 2**31 (three digit-12 planes).
+    const_digits: uint32 (k, n_c) — host-precomputed digit-12 constants.
+    Returns int32 (..., out_digits), denormal (caller normalises/subtracts).
+
+    Implemented as three int32 matmuls (one per scalar digit plane), i.e. the
+    dense base-extension matrix-vector products of paper §6.2.
+    """
+    k, n_c = const_digits.shape
+    sc_d = u32_to_digits(scalars, 3).astype(jnp.int32)    # (..., k, 3)
+    cd = const_digits.astype(jnp.int32)
+    out = jnp.zeros(scalars.shape[:-1] + (out_digits,), jnp.int32)
+    for t in range(3):
+        part = jnp.matmul(sc_d[..., t], cd)                # (..., n_c) < 2**28
+        out = out.at[..., t:t + n_c].add(part)
+    return out
+
+
+def cond_subtract(t, p_digits):
+    """Multi-digit conditional subtract: t - p if t >= p else t (canonical)."""
+    n = p_digits.shape[0]
+    t32 = t.astype(jnp.int32)
+    p32 = p_digits.astype(jnp.int32)
+    diff = jnp.zeros_like(t32)
+    borrow = jnp.zeros(t.shape[:-1], jnp.int32)
+    for j in range(n):
+        d = t32[..., j] - p32[j] - borrow
+        b = (d < 0).astype(jnp.int32)
+        diff = diff.at[..., j].set(d + b * BETA)
+        borrow = b
+    take_diff = borrow == 0  # t >= p
+    return jnp.where(take_diff[..., None], diff, t32).astype(jnp.uint32)
+
+
+def digits_submod_p(a, b, p_digits):
+    """(a - b) mod p over canonical digit arrays (a, b < p)."""
+    n = p_digits.shape[0]
+    a32 = a.astype(jnp.int32)
+    b32 = b.astype(jnp.int32)
+    p32 = p_digits.astype(jnp.int32)
+    diff = jnp.zeros_like(a32)
+    summ = jnp.zeros_like(a32)
+    borrow = jnp.zeros(a.shape[:-1], jnp.int32)
+    carry = jnp.zeros(a.shape[:-1], jnp.int32)
+    for j in range(n):
+        d = a32[..., j] - b32[..., j] - borrow
+        bo = (d < 0).astype(jnp.int32)
+        diff = diff.at[..., j].set(d + bo * BETA)
+        borrow = bo
+        s = diff[..., j] + p32[j] + carry  # diff[...,j] is final here (serial)
+        summ = summ.at[..., j].set(s & DIGIT_MASK)
+        carry = s >> BETA_BITS               # final top carry (=1) drops: +p-β^n
+    underflow = borrow == 1
+    return jnp.where(underflow[..., None], summ, diff).astype(jnp.uint32)
+
+
+def digits_geq(t, p_digits):
+    """t >= p comparison over canonical digit arrays."""
+    borrow = jnp.zeros(t.shape[:-1], jnp.int32)
+    t32 = t.astype(jnp.int32)
+    for j in range(p_digits.shape[0]):
+        d = t32[..., j] - jnp.int32(p_digits[j]) - borrow
+        borrow = (d < 0).astype(jnp.int32)
+    return borrow == 0

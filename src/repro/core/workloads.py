@@ -1,0 +1,162 @@
+"""Workload engines: the paper's unit-of-work "op" per cryptographic class.
+
+* ``DilithiumEngine`` — forward negacyclic NTT over Q = 8,380,417 (3-limb
+  u8×s8, single channel).  One op = one forward NTT of degree d (paper §7).
+* ``BN254Engine``     — 9-channel ERNS matrix-form transform with
+  CRT-consistent twiddles + per-coefficient Shenoy–Kumaresan / Montgomery
+  reduction.  One op = one coefficient-wise full-field polynomial
+  multiplication: dual staging passes + in-GEMM matmul + >2,100
+  base-extension Montgomery ops (paper §6.2).  ``n_channels=18`` selects the
+  extended full-exactness chain (``bn254_full``).
+
+Engines are pure-JAX modules; ``evaluate``/``reduce``/``e2e`` jit cleanly and
+are dispatched by the Tier-1/Tier-2 schedulers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import field as F
+from repro.core import limb_gemm as G
+from repro.core import ntt as NTT
+from repro.core import rns as R
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadClass:
+    """Workload-class descriptor used by the scheduler for zone segregation."""
+
+    name: str
+    precision_zone: int    # limb count — MXU type-homogeneity class
+    data_limbs: int
+    tw_limbs: int
+    n_channels: int
+
+
+DILITHIUM = WorkloadClass("dilithium", precision_zone=3, data_limbs=3,
+                          tw_limbs=3, n_channels=1)
+BN254 = WorkloadClass("bn254", precision_zone=4, data_limbs=4, tw_limbs=4,
+                      n_channels=9)
+BN254_FULL = WorkloadClass("bn254_full", precision_zone=4, data_limbs=4,
+                           tw_limbs=4, n_channels=18)
+
+CLASSES = {c.name: c for c in (DILITHIUM, BN254, BN254_FULL)}
+
+
+class DilithiumEngine:
+    """Forward negacyclic NTT over F_Q; exact end-to-end for all inputs."""
+
+    wclass = DILITHIUM
+
+    def __init__(self, d: int, *, accum: G.AccumModel = "fp32_mantissa",
+                 reduction: G.Reduction = "eager"):
+        self.d = d
+        self.accum = accum
+        self.reduction = reduction
+        # FIPS-204 negacyclic convention needs 2d | Q-1 (2-adicity 13 → d ≤
+        # 4096); larger edge-polynomial degrees use the cyclic transform.
+        self.negacyclic = (F.DILITHIUM_Q - 1) % (2 * d) == 0
+        w = NTT.ntt_matrix(d, F.DILITHIUM_Q, negacyclic=self.negacyclic)
+        self.plan = G.make_channel_plan(
+            w, F.DILITHIUM_Q, data_limbs=3, tw_limbs=3, accum=accum)
+
+    @property
+    def n_passes(self) -> int:
+        return self.plan.n_passes
+
+    def evaluate(self, a_u32, *, kernel_fn=None):
+        """(N, d) uint32 -> (N, d) uint32 forward NTT (one op per row)."""
+        with jax.named_scope("wzone_dilithium"), jax.named_scope("pzone_3limb"):
+            y, self.last_stats = G.staged_transform(
+                a_u32, self.plan, reduction=self.reduction, kernel_fn=kernel_fn)
+        return y
+
+    e2e = evaluate  # Dilithium op == the forward transform
+
+    def oracle_np(self, a_np: np.ndarray) -> np.ndarray:
+        w = NTT.ntt_matrix(self.d, F.DILITHIUM_Q, negacyclic=self.negacyclic)
+        return NTT.matrix_ntt_oracle_np(a_np, w, F.DILITHIUM_Q)
+
+
+class BN254Engine:
+    """ERNS matrix transform + per-coefficient Montgomery reduction."""
+
+    def __init__(self, d: int, *, accum: G.AccumModel = "fp32_mantissa",
+                 reduction: G.Reduction = "eager", n_channels: int = 9,
+                 p: int = F.BN254_FR, evaluation_matrix: np.ndarray | None = None):
+        self.wclass = BN254 if n_channels == 9 else BN254_FULL
+        self.d = d
+        self.accum = accum
+        self.reduction = reduction
+        self.chain = R.make_chain(n_channels, p=p)
+        # CRT-consistent evaluation operand: residues of one integer matrix Ω.
+        if evaluation_matrix is None:
+            evaluation_matrix = NTT.ntt_matrix(d, p)  # F_p NTT twiddles
+        self.omega = evaluation_matrix
+        self.plans = []
+        for m in self.chain.moduli:
+            w_ch = (evaluation_matrix.astype(object) % m).astype(np.uint32)
+            self.plans.append(G.make_channel_plan(
+                w_ch, m, data_limbs=4, tw_limbs=4, accum=accum))
+
+    @property
+    def n_channels(self) -> int:
+        return len(self.chain.moduli)
+
+    @property
+    def n_passes(self) -> int:
+        return self.plans[0].n_passes
+
+    def ingest(self, coeffs_np: np.ndarray):
+        """Host object-int coefficients [..., d] -> (..., d, C) uint32."""
+        return jnp.asarray(R.to_rns_np(coeffs_np, self.chain))
+
+    def evaluate(self, a_res, *, kernel_fn=None):
+        """(N, d, C) uint32 residues -> (N, d, C) transformed residues."""
+        outs = []
+        self.last_stats = None
+        with jax.named_scope("wzone_bn254"), jax.named_scope("pzone_4limb"):
+            for ci, plan in enumerate(self.plans):
+                with jax.named_scope(f"channel_{ci}"):
+                    y, st = G.staged_transform(
+                        a_res[..., ci], plan, reduction=self.reduction,
+                        kernel_fn=kernel_fn)
+                outs.append(y)
+                self.last_stats = st
+        return jnp.stack(outs, axis=-1)
+
+    def reduce(self, y_res):
+        """(N, d, C) transformed residues -> (N, d, nred) field digits."""
+        with jax.named_scope("wzone_bn254"), jax.named_scope("vpu_montgomery"):
+            return R.rns_to_field(y_res, self.chain)
+
+    def e2e(self, a_res, *, kernel_fn=None):
+        """The paper's BN254 op for N stacked tenant rows."""
+        return self.reduce(self.evaluate(a_res, kernel_fn=kernel_fn))
+
+    # --- host oracles ---------------------------------------------------------
+
+    def oracle_eval_np(self, coeffs_np: np.ndarray) -> np.ndarray:
+        """Exact bignum evaluation X_j = Σ a_i Ω_ij (object ints)."""
+        return coeffs_np.astype(object) @ self.omega.astype(object)
+
+    def in_envelope(self, coeffs_np: np.ndarray) -> bool:
+        x = self.oracle_eval_np(coeffs_np)
+        return int(np.max(x)) < self.chain.M
+
+
+@functools.lru_cache(maxsize=32)
+def make_engine(name: str, d: int, accum: str = "fp32_mantissa",
+                reduction: str = "eager"):
+    if name == "dilithium":
+        return DilithiumEngine(d, accum=accum, reduction=reduction)
+    if name == "bn254":
+        return BN254Engine(d, accum=accum, reduction=reduction, n_channels=9)
+    if name == "bn254_full":
+        return BN254Engine(d, accum=accum, reduction=reduction, n_channels=18)
+    raise KeyError(name)

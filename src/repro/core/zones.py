@@ -1,0 +1,44 @@
+"""Workload / precision zone tagging (paper §4.2).
+
+JAX cannot attach arbitrary mhlo.custom_call attributes from user code, but
+``jax.named_scope`` threads scope names into every HLO op's ``op_name``
+metadata — which survives XLA's optimisation pipeline (including into fused
+computations).  The zone discipline is therefore:
+
+* ``workload_zone(name)``   → scope ``wzone_<name>``
+* ``precision_zone(limbs)`` → scope ``pzone_<limbs>limb``
+* ``tenant_zone(i)``        → scope ``tzone_<i>``
+
+and the post-hoc validator (:mod:`repro.core.validator`) statically asserts
+on the compiled module that no fused computation mixes distinct zones, that
+staging barriers survived lowering, and that reduction ordering holds
+(Invariant 5.1).  This reproduces the paper's CustomCall-annotation mechanism
+with stock-JAX machinery; DESIGN.md records the substitution.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+WZONE_PREFIX = "wzone_"
+PZONE_PREFIX = "pzone_"
+TZONE_PREFIX = "tzone_"
+
+
+@contextlib.contextmanager
+def workload_zone(name: str):
+    with jax.named_scope(f"{WZONE_PREFIX}{name}"):
+        yield
+
+
+@contextlib.contextmanager
+def precision_zone(limbs: int):
+    with jax.named_scope(f"{PZONE_PREFIX}{limbs}limb"):
+        yield
+
+
+@contextlib.contextmanager
+def tenant_zone(tenant_id: int):
+    with jax.named_scope(f"{TZONE_PREFIX}{tenant_id}"):
+        yield

@@ -1,0 +1,24 @@
+"""jit'd wrapper for the fused staging-pass kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_ntt_tile.kernel import fused_ntt_tile_pallas
+from repro.kernels.limb_matmul.ops import _pad_to, _pick_bn
+
+
+def fused_ntt_tile(a_u8, b3_s8, *, modulus: int, accum: str = "int32_native",
+                   interpret: bool | None = None):
+    """(N, K) u8 × (K, D, n_diag) s8 -> (N, D) uint32 folded mod m."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, k = a_u8.shape
+    _, d, n_diag = b3_s8.shape
+    bn = _pick_bn(n)
+    bd = 128 if d % 128 == 0 else d
+    a_p = _pad_to(_pad_to(a_u8, 0, bn), 1, 128)
+    b_p = _pad_to(b3_s8, 0, 128)
+    out = fused_ntt_tile_pallas(a_p, b_p, modulus=modulus, accum=accum,
+                                bn=bn, bd=bd, interpret=interpret)
+    return out[:n, :d]

@@ -1,0 +1,19 @@
+"""Oracle for the fused staging pass: limb matmul + in-VMEM fold."""
+import jax.numpy as jnp
+
+from repro.core import field as F
+
+
+def fused_ntt_tile_ref(a_u8, b3_s8, modulus: int, accum: str = "int32_native"):
+    """a: (N, K) u8, b3: (K, D, n_diag) s8 -> (N, D) uint32 = fold(a @ b3)."""
+    k, d, n_diag = b3_s8.shape
+    if accum == "fp32_mantissa":
+        acc = jnp.dot(a_u8.astype(jnp.float32),
+                      b3_s8.reshape(k, d * n_diag).astype(jnp.float32),
+                      preferred_element_type=jnp.float32).astype(jnp.int32)
+    else:
+        acc = jnp.dot(a_u8.astype(jnp.int32),
+                      b3_s8.reshape(k, d * n_diag).astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
+    diags = acc.reshape(a_u8.shape[0], d, n_diag)
+    return F.fold_diagonals_u32(diags, jnp.uint32(modulus))

@@ -1,0 +1,43 @@
+"""jit'd wrapper for the limb matmul kernel: padding + dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.limb_matmul.kernel import limb_matmul_pallas
+
+
+def _pad_to(x, axis: int, mult: int):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _pick_bn(n: int) -> int:
+    if n >= 128:
+        return 128
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
+def limb_matmul(a_u8, b_s8, *, accum: str = "int32_native",
+                interpret: bool | None = None):
+    """(N, K) u8 × (K, M) s8 -> (N, M) int32 via the Pallas kernel.
+
+    Pads every dim to MXU-aligned block multiples (exact: zero padding).
+    interpret defaults to True off-TPU (kernel body runs in Python on CPU).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, k = a_u8.shape
+    m = b_s8.shape[1]
+    bn = _pick_bn(n)
+    a_p = _pad_to(_pad_to(a_u8, 0, bn), 1, 128)
+    b_p = _pad_to(_pad_to(b_s8, 0, 128), 1, 128)
+    out = limb_matmul_pallas(a_p, b_p, bn=bn, accum=accum, interpret=interpret)
+    return out[:n, :m]

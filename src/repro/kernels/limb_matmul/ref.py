@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the limb-interleaved u8×s8 matmul."""
+import jax.numpy as jnp
+
+
+def limb_matmul_ref(a_u8, b_s8, accum: str = "int32_native"):
+    """a: (N, K) u8, b: (K, M) s8 -> (N, M) int32 (exact within window).
+
+    fp32_mantissa model accumulates in float32 (v4 MXU path) and re-enters
+    the integer domain at the end — bit-faithful to the modelled hardware.
+    """
+    if accum == "fp32_mantissa":
+        out = jnp.dot(a_u8.astype(jnp.float32), b_s8.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+        return out.astype(jnp.int32)
+    return jnp.dot(a_u8.astype(jnp.int32), b_s8.astype(jnp.int32),
+                   preferred_element_type=jnp.int32)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the VPU Montgomery/mod-m fold of limb diagonals."""
+import jax.numpy as jnp
+
+from repro.core import field as F
+
+
+def mont_fold_ref(diags, m: int):
+    """int32 (..., n_diag) weight-class diagonals -> uint32 (...) mod m."""
+    return F.fold_diagonals_u32(diags, jnp.uint32(m))

@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines — before ANY other import (jax locks the
+# device count on first init).
+#
+# Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell with
+# ShapeDtypeStruct inputs (no allocation), print memory/cost analysis, parse
+# the collective schedule, and persist JSON artifacts for EXPERIMENTS.md.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch olmo_1b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch aegis_bn254 --shape serve_8k
+
+import argparse
+import json
+import time
+import traceback
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config, SHAPES, shape_applicable
+from repro.launch import hlo_analysis as HA
+from repro.launch import hlo_cost as HC
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import ShardingRules
+from repro.launch import specs as SP
+from repro.models import steps as ST
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+CRYPTO_SHAPES = {
+    # stacked-batch crypto serving cells (rows × degree)
+    "serve_256": dict(rows_per_core=8, d=256),
+    "serve_8k": dict(rows_per_core=8, d=8192),
+}
+
+
+def _crypto_cell(arch: str, shape: str, mesh, *, accum="fp32_mantissa",
+                 reduction="eager", scan_staging=False):
+    """Lower the Aegis sequencer op for a pod-slice stacked batch.
+
+    Twiddle limb planes enter as *traced operands* (sharded over "model" on
+    the output-column dim — twiddle TP), so even d=8192 cells lower from
+    ShapeDtypeStructs with no host constant materialisation.
+    """
+    from repro.core import field as FLD
+    from repro.core import limb_gemm as G
+    from repro.core import rns as R
+
+    spec = CRYPTO_SHAPES[shape]
+    n_cores = int(np.prod(mesh.devices.shape))
+    rows = spec["rows_per_core"] * n_cores
+    d = spec["d"]
+    name = {"aegis_bn254": "bn254", "aegis_dilithium": "dilithium"}[arch]
+
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    row_sharding = NamedSharding(mesh, P(dp_spec))
+
+    def transform(a, w, modulus):
+        if scan_staging:
+            return G.staged_transform_scan(a, w, modulus=modulus,
+                                           data_limbs=4 if name == "bn254"
+                                           else 3, accum=accum,
+                                           reduction=reduction)
+        return G.staged_transform_traced(a, w, modulus=modulus,
+                                         data_limbs=4 if name == "bn254"
+                                         else 3, accum=accum,
+                                         reduction=reduction)
+
+    if name == "dilithium":
+        a_sds = jax.ShapeDtypeStruct((rows, d), jnp.uint32)
+        w_sds = jax.ShapeDtypeStruct((d, d, 3), jnp.int8)
+
+        def step(a, w):
+            with jax.named_scope("wzone_dilithium"), \
+                    jax.named_scope("pzone_3limb"):
+                return transform(a, w, FLD.DILITHIUM_Q)
+
+        in_shardings = (row_sharding,
+                        NamedSharding(mesh, P(None, "model", None)))
+        lowered = jax.jit(step, in_shardings=in_shardings).lower(a_sds, w_sds)
+    else:
+        chain = R.make_chain(9)
+        c = len(chain.moduli)
+        a_sds = jax.ShapeDtypeStruct((rows, d, c), jnp.uint32)
+        w_sds = jax.ShapeDtypeStruct((c, d, d, 4), jnp.int8)
+
+        def step(a, w):
+            with jax.named_scope("wzone_bn254"), jax.named_scope("pzone_4limb"):
+                outs = []
+                for ci, m in enumerate(chain.moduli):
+                    with jax.named_scope(f"channel_{ci}"):
+                        outs.append(transform(a[..., ci], w[ci], m))
+                y = jnp.stack(outs, axis=-1)
+                with jax.named_scope("vpu_montgomery"):
+                    return R.rns_to_field(y, chain)
+
+        in_shardings = (NamedSharding(mesh, P(dp_spec, None, None)),
+                        NamedSharding(mesh, P(None, None, "model", None)))
+        lowered = jax.jit(step, in_shardings=in_shardings).lower(a_sds, w_sds)
+    return lowered, {"rows": rows, "d": d, "workload": name,
+                     "accum": accum, "reduction": reduction,
+                     "scan_staging": scan_staging}
+
+
+def _lm_cell(arch: str, shape: str, mesh, rules: ShardingRules,
+             overrides: dict | None = None):
+    import dataclasses
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(
+            cfg, **{k: v for k, v in overrides.items() if not k.startswith("_")})
+    shape_cfg = SHAPES[shape]
+    if shape_cfg.kind == "train":
+        params, opt = SP.abstract_train_state(cfg)
+        batch = SP.train_batch_specs(cfg, shape_cfg)
+        in_sh = (rules.tree_param_specs(params), rules.tree_opt_specs(opt),
+                 rules.tree_batch_specs(batch))
+        out_sh = (in_sh[0], in_sh[1],
+                  jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                               {"ce": 0., "aux": 0., "loss": 0.,
+                                "grad_norm": 0., "lr": 0.}))
+        step = ST.make_train_step(cfg)
+        lowered = jax.jit(step, in_shardings=in_sh,
+                          out_shardings=out_sh).lower(params, opt, batch)
+        extra = {"kind": "train",
+                 "tokens": shape_cfg.global_batch * shape_cfg.seq_len}
+    elif shape_cfg.kind == "prefill":
+        params = SP.abstract_params(cfg)
+        batch = SP.train_batch_specs(cfg, shape_cfg)
+        batch.pop("labels")
+        prefix = cfg.frontend_len if cfg.frontend == "vision_stub" else 0
+        prefill = ST.make_prefill(cfg, max_len=shape_cfg.seq_len + prefix)
+        in_sh = (rules.tree_param_specs(params), rules.tree_batch_specs(batch))
+        lowered = jax.jit(prefill, in_shardings=in_sh).lower(params, batch)
+        extra = {"kind": "prefill",
+                 "tokens": shape_cfg.global_batch * shape_cfg.seq_len}
+    else:  # decode
+        params = SP.abstract_params(cfg)
+        cache, token = SP.decode_inputs_specs(cfg, shape_cfg)
+        decode = ST.make_decode_step(cfg)
+        in_sh = (rules.tree_param_specs(params),
+                 rules.tree_cache_specs(cache),
+                 rules.tree_batch_specs({"tokens": token})["tokens"],
+                 NamedSharding(mesh, P()))
+        lowered = jax.jit(decode, in_shardings=in_sh).lower(
+            params, cache, token, jax.ShapeDtypeStruct((), jnp.int32))
+        extra = {"kind": "decode", "tokens": shape_cfg.global_batch}
+    return lowered, extra
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool,
+             accum: str = "fp32_mantissa", reduction: str = "eager",
+             scan_staging: bool = False, overrides: dict | None = None,
+             tag: str = "") -> dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(mesh.devices.shape))
+    record = {
+        "arch": arch, "shape": shape,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "multi_pod": multi_pod, "status": "ok", "tag": tag,
+    }
+    try:
+        if arch.startswith("aegis_"):
+            lowered, extra = _crypto_cell(arch, shape, mesh, accum=accum,
+                                          reduction=reduction,
+                                          scan_staging=scan_staging)
+            rules = None
+        else:
+            cfg = get_config(arch)
+            ok, reason = shape_applicable(cfg, shape)
+            if not ok:
+                record.update(status="skipped", reason=reason)
+                return record
+            rules = ShardingRules(
+                mesh, moe_replicate=bool((overrides or {}).get(
+                    "_moe_replicate", False)))
+            lowered, extra = _lm_cell(arch, shape, mesh, rules, overrides)
+        record.update(extra)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        coll = HA.collective_bytes(hlo)
+        record["memory"] = {
+            k: int(getattr(mem, k, 0)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes")
+        }
+        record["bytes_per_device"] = (
+            record["memory"]["argument_size_in_bytes"] +
+            record["memory"]["temp_size_in_bytes"])
+        record["cost_raw"] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        }
+        # trip-count-corrected per-device cost (XLA counts while bodies once)
+        cc = HC.corrected_cost(hlo)
+        record["cost_corrected"] = {k: float(v) for k, v in cc.items()}
+        record["collectives_naive"] = coll
+        record["roofline"] = HA.roofline_terms(
+            {"flops": cc["flops"], "bytes accessed": cc["bytes"]},
+            cc["collective_bytes"] * n_chips,  # cc is per-device already
+            n_chips=n_chips)
+        if rules is not None:
+            record["sharding_fallbacks"] = rules.fallbacks[:20]
+        record["compile_s"] = round(time.time() - t0, 1)
+    except Exception as e:  # noqa: BLE001
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      trace=traceback.format_exc()[-2000:])
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--accum", default="fp32_mantissa")
+    ap.add_argument("--reduction", default="eager")
+    ap.add_argument("--scan-staging", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="ArchConfig overrides, e.g. gqa_repeat_kv=true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        overrides[k] = {"true": True, "false": False}.get(
+            v.lower(), int(v) if v.isdigit() else v)
+
+    archs = (sorted(ARCHS) + ["aegis_bn254", "aegis_dilithium"]
+             if args.arch == "all" else args.arch.split(","))
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    out_dir = args.out or os.path.abspath(ARTIFACT_DIR)
+    os.makedirs(out_dir, exist_ok=True)
+
+    for arch in archs:
+        valid = list(CRYPTO_SHAPES) if arch.startswith("aegis_") else list(SHAPES)
+        shapes = valid if args.shape == "all" else [
+            s for s in args.shape.split(",") if s in valid]
+        for shape in shapes:
+            for multi in meshes:
+                rec = run_cell(arch, shape, multi_pod=multi, accum=args.accum,
+                               reduction=args.reduction,
+                               scan_staging=args.scan_staging,
+                               overrides=overrides or None, tag=args.tag)
+                mesh_tag = "multi" if multi else "single"
+                suffix = f"_{args.tag}" if args.tag else ""
+                fname = f"{arch}__{shape}__{mesh_tag}{suffix}.json"
+                with open(os.path.join(out_dir, fname), "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                roof = rec.get("roofline", {})
+                print(f"[{status:7s}] {arch:22s} {shape:12s} {mesh_tag:6s} "
+                      f"dom={roof.get('dominant', '-'):10s} "
+                      f"compile={rec.get('compile_s', 0)}s "
+                      f"{rec.get('error', '')[:120]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

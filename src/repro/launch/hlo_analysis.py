@@ -1,0 +1,93 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+memory term     = HLO_bytes / (chips × HBM_bw)
+collective term = collective_bytes / (chips × link_bw)
+
+cost_analysis() reports per-device (post-SPMD-partition) flops/bytes, so the
+terms below use per-chip quantities directly.  collective_bytes is parsed
+from the optimized HLO text: the summed result-operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Hardware constants (TPU v5e-class target): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TYPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _bytes_of_types(type_str: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind byte totals from an optimized HLO module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.lstrip()
+        if not s.startswith("%") and not s.startswith("ROOT"):
+            continue
+        m = re.match(r"(?:ROOT\s+)?%[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        type_str, opcode = m.groups()
+        for kind in _COLLECTIVES:
+            if opcode == kind or opcode.startswith(kind + "-"):
+                out[kind] += _bytes_of_types(type_str)
+                out["count"] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(cost: dict, coll_bytes: int, *, n_chips: int) -> dict:
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_accessed / HBM_BW
+    t_collective = (coll_bytes / n_chips) / ICI_BW
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_collective)), key=lambda kv: kv[1])[0]
+    return {
+        "flops_per_chip": flops,
+        "bytes_per_chip": bytes_accessed,
+        "collective_bytes_total": coll_bytes,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+    }
+
+
+def model_flops(n_params: int, n_tokens: int, *, active_params: int | None = None,
+                train: bool = True) -> float:
+    """6·N·D (dense train) / 2·N·D (inference); MoE uses active params."""
+    n = active_params if active_params is not None else n_params
+    return (6.0 if train else 2.0) * n * n_tokens

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run must set
+XLA_FLAGS before any jax initialisation.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Degenerate mesh over whatever devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n, 1) if n > 1 else (1, 1, 1),
+                         ("pod", "data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """The batch-sharding axes present in this mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

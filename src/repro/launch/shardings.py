@@ -1,0 +1,160 @@
+"""Logical sharding rules: tree-path pattern → PartitionSpec with divisibility
+fallback (MaxText-style logical axis rules).
+
+TP over "model" (attention heads / d_ff / vocab / experts), DP over
+("pod", "data"), SP (sequence sharding) over "data" for the long-context
+decode caches.  Any dim that does not divide its mesh axes falls back to
+replication for that dim — e.g. StarCoder2's 36 query heads or Granite's
+49,155-entry vocab under model=16 (recorded by `fallbacks`).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# (path regex, per-dim logical axes measured from the *last* dims of the leaf)
+# Leading stacked axes (layer stack) are padded with None automatically.
+PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"(^|/)embed$",        (("model",), None)),            # (vocab, d)
+    (r"pos_embed$",         (None, None)),
+    (r"lm_head$",           (None, ("model",))),            # (d, vocab)
+    (r"attn/w[qkv]$",       (None, ("model",))),
+    (r"attn/wo$",           (("model",), None)),
+    (r"cross/w[qkv]$",      (None, ("model",))),
+    (r"cross/wo$",          (("model",), None)),
+    (r"mlp/wi(_gate|_up)?$", (None, ("model",))),
+    (r"mlp/wo$",            (("model",), None)),
+    (r"moe/router$",        (None, None)),
+    (r"moe/wi(_gate|_up)$", (("model",), None, None)),      # (E, d, ff) — EP
+    (r"moe/wo$",            (("model",), None, None)),
+    (r"shared/wi(_gate|_up)$", (None, ("model",))),
+    (r"shared/wo$",         (("model",), None)),
+    (r"ssm/in_proj$",       (None, ("model",))),
+    (r"ssm/bc_proj$",       (None, ("model",))),
+    (r"ssm/dt_proj$",       (None, None)),
+    (r"ssm/out_proj$",      (("model",), None)),
+    (r"ssm/(a_log|d_skip)$", (None,)),
+    (r"(ln_|norm)",         None),                          # replicate norms
+]
+
+# fallback alternatives tried per rule when the primary axis does not divide
+MOE_ALT = {r"moe/wi(_gate|_up)$": (None, None, ("model",)),
+           r"moe/wo$": (None, ("model",), None)}
+
+
+class ShardingRules:
+    def __init__(self, mesh, *, moe_replicate: bool = False):
+        self.mesh = mesh
+        self.axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.fallbacks: list[str] = []
+        # §Perf knob: replicate expert weights instead of EP/d_ff sharding
+        # (small-expert models: trades memory for zero MoE collectives)
+        self.moe_replicate = moe_replicate
+
+    def _fits(self, dim: int, axes) -> bool:
+        if axes is None:
+            return True
+        size = 1
+        for a in axes:
+            size *= self.axis_sizes.get(a, 1)
+        return dim % size == 0
+
+    def _spec_from_dims(self, shape, dims, path=""):
+        """dims: per-dim axes for the LAST len(dims) dims of shape."""
+        pad = len(shape) - len(dims)
+        spec = [None] * pad
+        for dim_size, axes in zip(shape[pad:], dims):
+            if axes is None:
+                spec.append(None)
+            elif self._fits(dim_size, axes):
+                spec.append(axes[0] if len(axes) == 1 else tuple(axes))
+            else:
+                self.fallbacks.append(f"{path}: dim {dim_size} !% {axes}")
+                spec.append(None)
+        return P(*spec)
+
+    def param_spec(self, path: str, shape) -> P:
+        if self.moe_replicate and re.search(r"moe/(wi|wo|router)", path):
+            return P()
+        for pat, dims in PARAM_RULES:
+            if re.search(pat, path):
+                if dims is None:
+                    return P()
+                # MoE expert-axis fallback: try EP first, then d_ff sharding
+                if pat in MOE_ALT and not self._fits(
+                        shape[len(shape) - len(dims)], dims[0]):
+                    alt = MOE_ALT[pat]
+                    return self._spec_from_dims(shape, alt, path)
+                return self._spec_from_dims(shape, dims, path)
+        return P()
+
+    def batch_spec(self, shape, *, seq_axis: int | None = 1) -> P:
+        dp = tuple(a for a in ("pod", "data") if a in self.axis_sizes)
+        b = shape[0]
+        spec = [None] * len(shape)
+        if self._fits(b, dp):
+            spec[0] = dp if len(dp) > 1 else dp[0]
+        elif "data" in self.axis_sizes and self._fits(b, ("data",)):
+            spec[0] = "data"
+        return P(*spec)
+
+    def cache_spec(self, path: str, shape) -> P:
+        """Decode caches: (L, B, S, H, dh) k/v, (L, B, S) pos,
+        (L, B, H, P, N) ssm state.  Batch → data(/pod); heads → model;
+        B==1 (long-context) → shard the sequence dim over data (SP)."""
+        dp = tuple(a for a in ("pod", "data") if a in self.axis_sizes)
+        spec = [None] * len(shape)
+        b = shape[1]
+        batch_sharded = False
+        if self._fits(b, dp) and b > 1:
+            spec[1] = dp if len(dp) > 1 else dp[0]
+            batch_sharded = True
+        if path.endswith("state"):                      # (L,B,H,P,N)
+            if self._fits(shape[2], ("model",)):
+                spec[2] = "model"
+            return P(*spec)
+        if path.endswith("pos"):                        # (L,B,S)
+            if not batch_sharded and self._fits(shape[2], ("data",)):
+                spec[2] = "data"
+            return P(*spec)
+        if len(shape) >= 5:                             # (L,B,S,H,dh) k/v
+            if not batch_sharded and self._fits(shape[2], ("data",)):
+                spec[2] = "data"                        # sequence parallelism
+            if self._fits(shape[3], ("model",)):
+                spec[3] = "model"
+        return P(*spec)
+
+    # --- tree-level helpers ----------------------------------------------------
+
+    def tree_param_specs(self, tree):
+        def by_path(path, leaf):
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            return NamedSharding(self.mesh, self.param_spec(key, leaf.shape))
+        return jax.tree_util.tree_map_with_path(by_path, tree)
+
+    def tree_opt_specs(self, opt_tree):
+        def by_path(path, leaf):
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            if key.startswith(("m/", "v/")):
+                key = key[2:]
+            if leaf.ndim == 0:
+                return NamedSharding(self.mesh, P())
+            return NamedSharding(self.mesh, self.param_spec(key, leaf.shape))
+        return jax.tree_util.tree_map_with_path(by_path, opt_tree)
+
+    def tree_batch_specs(self, batch_tree):
+        return jax.tree.map(
+            lambda leaf: NamedSharding(self.mesh, self.batch_spec(leaf.shape)),
+            batch_tree)
+
+    def tree_cache_specs(self, cache_tree):
+        def by_path(path, leaf):
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            return NamedSharding(self.mesh, self.cache_spec(key, leaf.shape))
+        return jax.tree_util.tree_map_with_path(by_path, cache_tree)

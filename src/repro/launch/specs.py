@@ -1,0 +1,45 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) dry-run cell —
+weak-type-correct, shardable, zero device allocation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES
+from repro.models import model as M
+from repro.models import steps as ST
+from repro.optim import init_opt_state
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg, shape_cfg) -> dict:
+    b, s = shape_cfg.global_batch, shape_cfg.seq_len
+    batch = {"tokens": _sds((b, s), jnp.int32),
+             "labels": _sds((b, s), jnp.int32)}
+    if cfg.frontend:
+        batch["embeds"] = _sds((b, cfg.frontend_len, cfg.d_model), jnp.float32)
+    return batch
+
+
+def decode_inputs_specs(cfg, shape_cfg):
+    """(cache, token, index) stand-ins for a serve_step decode cell: one new
+    token against a KV/state cache of seq_len."""
+    b, s = shape_cfg.global_batch, shape_cfg.seq_len
+    enc_len = cfg.frontend_len if cfg.encoder_layers else 0
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, b, s, enc_len=enc_len))
+    token = _sds((b, 1), jnp.int32)
+    return cache, token
+
+
+def abstract_train_state(cfg):
+    params = M.abstract_params(cfg)
+    opt = jax.eval_shape(lambda p: init_opt_state(p), params)
+    return params, opt
+
+
+def abstract_params(cfg):
+    return M.abstract_params(cfg)

@@ -1,0 +1,79 @@
+"""Training launcher: mesh + logical shardings + fault-tolerant loop.
+
+On real hardware this runs under `python -m repro.launch.train --arch ...`
+per host; on this CPU container it drives the reduced smoke configs (the
+examples use it for the ~100M-param demonstration run).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+import jax
+
+from repro.configs import get_config, smoke_config
+from repro.data import DataConfig, SyntheticLMStream
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.launch.shardings import ShardingRules
+from repro.models import steps as ST
+from repro.optim import AdamWConfig
+from repro.runtime import FaultTolerantLoop
+
+
+def build(cfg, *, mesh=None, seq_len=128, global_batch=8, seed=0,
+          lr=3e-4, total_steps=1000):
+    mesh = mesh or make_local_mesh()
+    rules = ShardingRules(mesh)
+    params, opt_state = ST.init_train_state(cfg, jax.random.PRNGKey(seed))
+    params = jax.device_put(params, rules.tree_param_specs(params))
+    opt_state = jax.device_put(opt_state, rules.tree_opt_specs(opt_state))
+    opt_cfg = AdamWConfig(lr=lr, total_steps=total_steps,
+                          warmup_steps=max(10, total_steps // 20))
+    step = jax.jit(ST.make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+    data_cfg = DataConfig(seq_len=seq_len, global_batch=global_batch,
+                          vocab_size=cfg.vocab_size, seed=seed,
+                          frontend_len=cfg.frontend_len if cfg.frontend else 0,
+                          d_model=cfg.d_model)
+    stream = SyntheticLMStream(data_cfg)
+    return params, opt_state, step, stream
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--log", default=None)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    params, opt_state, step, stream = build(
+        cfg, seq_len=args.seq_len, global_batch=args.global_batch,
+        lr=args.lr, total_steps=args.steps)
+
+    loop = FaultTolerantLoop(step, stream, params, opt_state,
+                             ckpt_dir=args.ckpt_dir,
+                             ckpt_every=args.ckpt_every)
+    t0 = time.time()
+    loop.run(args.steps)
+    dt = time.time() - t0
+    losses = [m["loss"] for m in loop.metrics_log]
+    print(f"steps={args.steps} wall={dt:.1f}s "
+          f"first_loss={losses[0]:.4f} last_loss={losses[-1]:.4f} "
+          f"median_step={loop.watchdog.median*1e3:.0f}ms "
+          f"stragglers={loop.watchdog.flagged}")
+    if args.log:
+        with open(args.log, "w") as f:
+            json.dump({"metrics": loop.metrics_log, "wall_s": dt}, f)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,336 @@
+"""Transformer building blocks: norms, RoPE, GQA attention (naive, blockwise
+flash-style, decode-with-cache, sliding-window), MLPs and top-k MoE.
+
+Functional style: params are plain dicts of jnp arrays; every function takes
+(params, inputs) and is shape-polymorphic over batch/sequence.  Compute dtype
+follows the inputs (bf16 in production configs); softmax/norm statistics are
+always float32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# --- norms --------------------------------------------------------------------
+
+
+def rmsnorm(x, weight):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, weight, bias):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_np(x):
+    """OLMo's non-parametric LayerNorm (no weight/bias)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype)
+
+
+def apply_norm(cfg, params, x, name: str):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, params[name]["scale"])
+    if cfg.norm == "layernorm":
+        return layernorm(x, params[name]["scale"], params[name]["bias"])
+    return layernorm_np(x)
+
+
+def norm_params(cfg, d: int):
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((d,), _dt(cfg))}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), _dt(cfg)),
+                "bias": jnp.zeros((d,), _dt(cfg))}
+    return {}
+
+
+def _dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# --- RoPE ---------------------------------------------------------------------
+
+
+def rope_frequencies(d_head: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    freqs = rope_frequencies(x.shape[-1], theta)           # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, Dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- attention ----------------------------------------------------------------
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d)
+
+
+def _group_q(q, hkv: int):
+    """(B, S, Hq, Dh) -> (B, S, Hkv, G, Dh) — query heads grouped per KV head
+    so GQA never materialises repeated K/V (§Perf: 16× smaller KV operands
+    for llama3-405b decode)."""
+    b, s, hq, dh = q.shape
+    return q.reshape(b, s, hkv, hq // hkv, dh)
+
+
+def naive_attention(q, k, v, *, causal: bool, window: int = 0,
+                    q_offset: int = 0):
+    """q: (B, Sq, Hq, Dh), k/v: (B, Skv, Hkv, Dh), Hkv | Hq (GQA grouped).
+    Scores materialised — short sequences and decode; blockwise_attention
+    covers long prefill."""
+    hkv = k.shape[2]
+    q5 = _group_q(q, hkv)
+    scale = q.shape[-1] ** -0.5
+    # mixed-precision MXU dot: bf16 operands, f32 accumulation — never
+    # materialises an f32 copy of the (huge) KV cache (§Perf cell 2, I2)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q5, k,
+                        preferred_element_type=jnp.float32) * scale
+    sq, skv = q.shape[1], k.shape[1]
+    q_pos = jnp.arange(sq) + q_offset
+    k_pos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    b, _, hq, dh = q.shape
+    return out.reshape(b, sq, hq, dh).astype(q.dtype)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, block: int = 1024,
+                        window: int = 0):
+    """Flash-style online-softmax attention: KV scanned in blocks, O(S·block)
+    score memory, GQA-grouped (no KV repetition). Exact (fp32 running
+    max/denominator)."""
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    skv = k.shape[1]
+    n_blocks = -(-skv // block)
+    pad = n_blocks * block - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, n_blocks, block, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, n_blocks, block, hkv, dh).transpose(1, 0, 2, 3, 4)
+    scale = dh ** -0.5
+    qf = _group_q(q, hkv)
+    q_pos = jnp.arange(sq)
+
+    def body(carry, blk):
+        acc, m_run, l_run, blk_idx = carry
+        kblk, vblk = blk
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kblk,
+                            preferred_element_type=jnp.float32) * scale
+        k_pos = blk_idx * block + jnp.arange(block)
+        mask = k_pos[None, :] < skv
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m_run, scores.max(axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l_run * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        return (acc, m_new, l_new, blk_idx + 1), None
+
+    g = hq // hkv
+    acc0 = jnp.zeros((b, hkv, g, sq, dh), jnp.float32)
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    (acc, m_run, l_run, _), _ = jax.lax.scan(
+        body, (acc0, m0, l0, jnp.int32(0)), (kb, vb))
+    out = acc / jnp.maximum(l_run[..., None], 1e-30)
+    # (B, Hkv, G, Sq, Dh) -> (B, Sq, Hq, Dh)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, dh)
+    return out.astype(q.dtype)
+
+
+def attention_params(cfg, rng, d_model=None):
+    d = d_model or cfg.d_model
+    q_dim, kv_dim = cfg.qkv_dims
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    init = jax.nn.initializers.normal(0.02)
+    return {
+        "wq": init(k1, (d, q_dim), _dt(cfg)),
+        "wk": init(k2, (d, kv_dim), _dt(cfg)),
+        "wv": init(k3, (d, kv_dim), _dt(cfg)),
+        "wo": init(k4, (q_dim, d), _dt(cfg)),
+    }
+
+
+def attention_forward(cfg, params, x, *, positions, causal=True, cache=None,
+                      cache_index=None, window=None, kv_override=None):
+    """GQA attention. Returns (out, new_cache).
+
+    cache: {"k","v"} (B, max_len, Hkv, Dh) — decode inserts at cache_index.
+    kv_override: (k, v) for cross-attention (encoder outputs, pre-projected).
+    """
+    b, s, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    window = cfg.attn_window if window is None else window
+    q = (x @ params["wq"]).reshape(b, s, hq, dh)
+    if kv_override is None:
+        k = (x @ params["wk"]).reshape(b, s, hkv, dh)
+        v = (x @ params["wv"]).reshape(b, s, hkv, dh)
+        if cfg.rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = kv_override
+        if cfg.rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+
+    new_cache = cache
+    if cache is not None and kv_override is None:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
+        new_cache = {"k": k_cache, "v": v_cache}
+        k, v = k_cache, v_cache
+
+    if getattr(cfg, "gqa_repeat_kv", False):
+        # baseline path (§Perf before/after): materialise repeated KV heads
+        k = _repeat_kv(k, hq // hkv)
+        v = _repeat_kv(v, hq // hkv)
+
+    if cache is not None and kv_override is None:
+        # decode / cached path: mask beyond cache_index + s
+        q_offset = cache_index
+        out = naive_attention(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset)
+    elif s >= cfg.blockwise_attn_threshold:
+        out = blockwise_attention(q, k, v, causal=causal,
+                                  block=cfg.attn_block_size, window=window)
+    else:
+        out = naive_attention(q, k, v, causal=causal, window=window)
+    out = out.reshape(b, s, hq * dh) @ params["wo"]
+    return out, new_cache
+
+
+# --- MLP ----------------------------------------------------------------------
+
+
+def mlp_params(cfg, rng, d_ff=None):
+    d, dff = cfg.d_model, d_ff or cfg.d_ff
+    init = jax.nn.initializers.normal(0.02)
+    if cfg.activation == "swiglu":
+        k1, k2, k3 = jax.random.split(rng, 3)
+        return {"wi_gate": init(k1, (d, dff), _dt(cfg)),
+                "wi_up": init(k2, (d, dff), _dt(cfg)),
+                "wo": init(k3, (dff, d), _dt(cfg))}
+    k1, k2 = jax.random.split(rng, 2)
+    return {"wi": init(k1, (d, dff), _dt(cfg)),
+            "wo": init(k2, (dff, d), _dt(cfg))}
+
+
+def mlp_forward(cfg, params, x):
+    if cfg.activation == "swiglu":
+        return (jax.nn.silu(x @ params["wi_gate"]) * (x @ params["wi_up"])) @ params["wo"]
+    return jax.nn.gelu(x @ params["wi"]) @ params["wo"]
+
+
+# --- MoE ----------------------------------------------------------------------
+
+
+def moe_params(cfg, rng):
+    d, dff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    init = jax.nn.initializers.normal(0.02)
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    p = {
+        "router": init(k1, (d, e), jnp.float32),
+        "wi_gate": init(k2, (e, d, dff), _dt(cfg)),
+        "wi_up": init(k3, (e, d, dff), _dt(cfg)),
+        "wo": init(k4, (e, dff, d), _dt(cfg)),
+    }
+    if cfg.n_shared_experts:
+        k5, k6, k7 = jax.random.split(jax.random.fold_in(rng, 7), 3)
+        sdff = dff * cfg.n_shared_experts
+        p["shared"] = {"wi_gate": init(k5, (d, sdff), _dt(cfg)),
+                       "wi_up": init(k6, (d, sdff), _dt(cfg)),
+                       "wo": init(k7, (sdff, d), _dt(cfg))}
+    return p
+
+
+def moe_forward(cfg, params, x, *, capacity_factor: float | None = None):
+    if capacity_factor is None:
+        capacity_factor = getattr(cfg, "moe_capacity_factor", 1.25)
+    """Capacity-based top-k MoE with scatter dispatch / gather combine.
+
+    Tokens are scattered into per-expert buffers (E, C, d) — the layout that
+    shards over the "model" axis for expert parallelism and whose resharding
+    is the MoE all-to-all in the compiled collective schedule.  FLOPs scale
+    with top_k·capacity_factor, not n_experts (unlike dense dispatch).
+    Overflowing tokens are dropped (Switch semantics).  Returns (out, aux).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = xf.astype(jnp.float32) @ params["router"]           # (T, E)
+    topv, topi = jax.lax.top_k(logits, k)                        # (T, K)
+    gates = jax.nn.softmax(topv, axis=-1)
+
+    # aux load-balancing loss (Switch-style)
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = probs.mean(axis=0)
+    assigned = jax.nn.one_hot(topi, e, dtype=jnp.float32).sum(1)  # (T, E)
+    ce = assigned.mean(axis=0) / k
+    aux = e * jnp.sum(me * ce)
+
+    flat_e = topi.reshape(-1)                                     # (T·K,)
+    flat_gate = gates.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)           # (T·K, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    capacity = max(4, int(t * k / e * capacity_factor + 0.999))
+    keep = pos_in_e < capacity
+    pos_c = jnp.minimum(pos_in_e, capacity - 1)
+
+    contrib = xf[flat_tok] * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((e, capacity, d), x.dtype).at[flat_e, pos_c].add(contrib)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["wi_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["wi_up"])
+    y = jnp.einsum("ecf,efd->ecd", h, params["wo"])               # (E, C, d)
+
+    yk = y[flat_e, pos_c] * (flat_gate * keep).astype(x.dtype)[:, None]
+    out = jnp.zeros((t, d), x.dtype).at[flat_tok].add(yk)
+    out = out.reshape(b, s, d)
+    if cfg.n_shared_experts:
+        sp = params["shared"]
+        out = out + (jax.nn.silu(x @ sp["wi_gate"]) * (x @ sp["wi_up"])) @ sp["wo"]
+    return out, aux

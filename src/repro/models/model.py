@@ -1,0 +1,386 @@
+"""Composable model zoo: one forward/init covering all assigned families.
+
+* scan-over-layers with stacked per-layer params (compile-time O(1) in depth
+  — required for the 126-layer 405B dry-run),
+* optional remat (jax.checkpoint) around the layer body for training,
+* KV caches (full, sliding-window ring for Hymba), SSM state caches, and
+  whisper cross-attention caches for decode,
+* modality frontends are STUBS per the assignment: ``batch["embeds"]``
+  carries precomputed frame/patch embeddings at d_model.
+
+Modes: "train" (causal, full seq), "prefill" (returns cache), "decode"
+(single token step against the cache).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm as S
+
+
+def _dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# --- parameter init -------------------------------------------------------------
+
+
+def _layer_params(cfg, rng, *, kind: str):
+    """kind: decoder | encoder | cross_decoder."""
+    p = {}
+    ks = jax.random.split(rng, 8)
+    if kind != "ssm_only" and cfg.n_heads:
+        p["attn"] = L.attention_params(cfg, ks[0])
+        p["ln_attn"] = L.norm_params(cfg, cfg.d_model)
+    if kind == "cross_decoder":
+        p["cross"] = L.attention_params(cfg, ks[1])
+        p["ln_cross"] = L.norm_params(cfg, cfg.d_model)
+    if cfg.family == "moe":
+        p["moe"] = L.moe_params(cfg, ks[2])
+        p["ln_mlp"] = L.norm_params(cfg, cfg.d_model)
+    elif cfg.d_ff:
+        p["mlp"] = L.mlp_params(cfg, ks[3])
+        p["ln_mlp"] = L.norm_params(cfg, cfg.d_model)
+    if cfg.family in ("ssm", "hybrid") or kind == "ssm_only":
+        p["ssm"] = S.ssm_params(cfg, ks[4])
+        if "ln_attn" not in p:
+            p["ln_attn"] = L.norm_params(cfg, cfg.d_model)
+    return p
+
+
+def init_params(cfg, rng):
+    ks = jax.random.split(rng, 6)
+    init = jax.nn.initializers.normal(0.02)
+    params = {
+        "embed": init(ks[0], (cfg.vocab_size, cfg.d_model), _dt(cfg)),
+        "ln_final": L.norm_params(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init(ks[1], (cfg.d_model, cfg.vocab_size), _dt(cfg))
+    if cfg.max_position_embeddings:
+        params["pos_embed"] = init(
+            ks[2], (cfg.max_position_embeddings, cfg.d_model), _dt(cfg))
+
+    kind = "cross_decoder" if cfg.encoder_layers else (
+        "ssm_only" if cfg.family == "ssm" else "decoder")
+    layer_keys = jax.random.split(ks[3], cfg.n_layers)
+    params["layers"] = jax.vmap(
+        lambda k: _layer_params(cfg, k, kind=kind))(layer_keys)
+
+    if cfg.encoder_layers:
+        enc_keys = jax.random.split(ks[4], cfg.encoder_layers)
+        params["enc_layers"] = jax.vmap(
+            lambda k: _layer_params(cfg, k, kind="encoder"))(enc_keys)
+        params["enc_ln_final"] = L.norm_params(cfg, cfg.d_model)
+        params["enc_pos_embed"] = init(
+            ks[5], (max(cfg.frontend_len, 1), cfg.d_model), _dt(cfg))
+    return params
+
+
+def abstract_params(cfg):
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# --- caches ----------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, max_len: int, *, enc_len: int = 0):
+    """Stacked (n_layers, ...) cache pytree for decode."""
+    cache_len = min(max_len, cfg.attn_window) if cfg.attn_window else max_len
+    c = {}
+    if cfg.n_heads:
+        kv = (cfg.n_layers, batch, cache_len, cfg.n_kv_heads, cfg.d_head)
+        c["k"] = jnp.zeros(kv, _dt(cfg))
+        c["v"] = jnp.zeros(kv, _dt(cfg))
+        if cfg.attn_window:
+            c["pos"] = jnp.full((cfg.n_layers, batch, cache_len), -1, jnp.int32)
+    if cfg.family in ("ssm", "hybrid"):
+        d_in = cfg.ssm_expand * cfg.d_model
+        c["state"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_heads, d_in // cfg.ssm_heads,
+             cfg.ssm_state), jnp.float32)
+    if cfg.encoder_layers:
+        c["cross_k"] = jnp.zeros(
+            (cfg.n_layers, batch, enc_len, cfg.n_kv_heads, cfg.d_head), _dt(cfg))
+        c["cross_v"] = jnp.zeros_like(c["cross_k"])
+    return c
+
+
+# --- layer bodies -----------------------------------------------------------------
+
+
+def _windowed_insert(cfg, lp, cache_layer, k_new, v_new, index, positions):
+    """Ring-buffer insert for sliding-window caches (Hymba long decode)."""
+    w = cache_layer["k"].shape[1]
+    slot = index % w
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache_layer["k"], k_new.astype(cache_layer["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache_layer["v"], v_new.astype(cache_layer["v"].dtype), slot, axis=1)
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        cache_layer["pos"], positions.astype(jnp.int32), slot, axis=1)
+    return {"k": k, "v": v, "pos": pos}
+
+
+def _attn_block(cfg, lp, x, *, positions, mode, cache_layer, index,
+                window=None):
+    h = L.apply_norm(cfg, lp, x, "ln_attn")
+    if mode == "prefill" and cfg.attn_window and cache_layer is not None:
+        # windowed prefill: full blockwise pass, then ring-fill the cache
+        # with the trailing `window` tokens' K/V.
+        b, s, _ = h.shape
+        hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        q = (h @ lp["attn"]["wq"]).reshape(b, s, hq, dh)
+        k = (h @ lp["attn"]["wk"]).reshape(b, s, hkv, dh)
+        v = (h @ lp["attn"]["wv"]).reshape(b, s, hkv, dh)
+        if cfg.rope:
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+        if s >= cfg.blockwise_attn_threshold:
+            out = L.blockwise_attention(q, k, v, causal=True,
+                                        block=cfg.attn_block_size,
+                                        window=cfg.attn_window)
+        else:
+            out = L.naive_attention(q, k, v, causal=True,
+                                    window=cfg.attn_window)
+        out = out.reshape(b, s, hq * dh) @ lp["attn"]["wo"]
+        w = cache_layer["k"].shape[1]
+        tail = min(w, s)
+        # ring invariant: position p lives at slot p % w (so decode's
+        # index % w insert always overwrites the oldest entry)
+        slots = positions[0, s - tail:] % w
+        new_cache = {
+            "k": jnp.zeros_like(cache_layer["k"]).at[:, slots].set(
+                k[:, s - tail:].astype(cache_layer["k"].dtype)),
+            "v": jnp.zeros_like(cache_layer["v"]).at[:, slots].set(
+                v[:, s - tail:].astype(cache_layer["v"].dtype)),
+            "pos": jnp.full_like(cache_layer["pos"], -1).at[:, slots].set(
+                positions[:, s - tail:]),
+        }
+        return out, new_cache
+    if mode == "decode" and cfg.attn_window and cache_layer is not None:
+        # sliding-window ring cache: project, rope at absolute pos, ring insert
+        b, s, _ = h.shape
+        hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        q = (h @ lp["attn"]["wq"]).reshape(b, s, hq, dh)
+        k = (h @ lp["attn"]["wk"]).reshape(b, s, hkv, dh)
+        v = (h @ lp["attn"]["wv"]).reshape(b, s, hkv, dh)
+        if cfg.rope:
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+        new_cache = _windowed_insert(cfg, lp, cache_layer, k, v, index,
+                                     positions)
+        scale = dh ** -0.5
+        q5 = L._group_q(q, hkv)
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", q5, new_cache["k"],
+                            preferred_element_type=jnp.float32) * scale
+        valid = (new_cache["pos"] >= 0)[:, None, :] & \
+                (new_cache["pos"][:, None, :] <= positions[:, :, None]) & \
+                (new_cache["pos"][:, None, :] > positions[:, :, None] - cfg.attn_window)
+        scores = jnp.where(valid[:, None, None], scores, L.NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd",
+                         probs.astype(new_cache["v"].dtype), new_cache["v"],
+                         preferred_element_type=jnp.float32)
+        out = out.astype(x.dtype).reshape(b, s, hq * dh) @ lp["attn"]["wo"]
+        return out, new_cache
+    out, new_cache = L.attention_forward(
+        cfg, lp["attn"], h, positions=positions, causal=True,
+        cache={"k": cache_layer["k"], "v": cache_layer["v"]}
+        if cache_layer is not None else None,
+        cache_index=index, window=window)
+    if cache_layer is not None and "pos" in cache_layer:
+        new_cache["pos"] = cache_layer["pos"]
+    return out, new_cache
+
+
+def _decoder_layer(cfg, lp, x, aux, *, positions, mode, cache_layer=None,
+                   index=0, enc_out=None):
+    new_cache = {}
+    if cfg.family == "ssm":
+        h = L.apply_norm(cfg, lp, x, "ln_attn")
+        st = cache_layer.get("state") if cache_layer else None
+        y, st_new = S.ssd_forward(cfg, lp["ssm"], h, state=st)
+        x = x + y
+        if cache_layer is not None:
+            new_cache["state"] = st_new
+    elif cfg.family == "hybrid":
+        attn_cache = ({"k": cache_layer["k"], "v": cache_layer["v"],
+                       "pos": cache_layer["pos"]}
+                      if cache_layer is not None else None)
+        a_out, c_new = _attn_block(cfg, lp, x, positions=positions, mode=mode,
+                                   cache_layer=attn_cache, index=index)
+        h = L.apply_norm(cfg, lp, x, "ln_attn")
+        st = cache_layer.get("state") if cache_layer else None
+        s_out, st_new = S.ssd_forward(cfg, lp["ssm"], h, state=st)
+        x = x + (a_out + s_out) / 2.0
+        if cache_layer is not None:
+            new_cache.update(c_new)
+            new_cache["state"] = st_new
+    else:
+        attn_cache = ({"k": cache_layer["k"], "v": cache_layer["v"]}
+                      if cache_layer is not None else None)
+        a_out, c_new = _attn_block(cfg, lp, x, positions=positions, mode=mode,
+                                   cache_layer=attn_cache, index=index)
+        x = x + a_out
+        if cache_layer is not None:
+            new_cache.update(c_new)
+
+    if cfg.encoder_layers:
+        h = L.apply_norm(cfg, lp, x, "ln_cross")
+        if cache_layer is not None:
+            kv = (cache_layer["cross_k"], cache_layer["cross_v"])
+        else:
+            b = enc_out.shape[0]
+            kv = ((enc_out @ lp["cross"]["wk"]).reshape(
+                      b, -1, cfg.n_kv_heads, cfg.d_head),
+                  (enc_out @ lp["cross"]["wv"]).reshape(
+                      b, -1, cfg.n_kv_heads, cfg.d_head))
+        c_out, _ = L.attention_forward(
+            cfg, lp["cross"], h, positions=positions, causal=False,
+            kv_override=kv, window=0)
+        x = x + c_out
+        if cache_layer is not None:
+            new_cache["cross_k"] = cache_layer["cross_k"]
+            new_cache["cross_v"] = cache_layer["cross_v"]
+
+    if cfg.family == "moe":
+        h = L.apply_norm(cfg, lp, x, "ln_mlp")
+        y, a = L.moe_forward(cfg, lp["moe"], h)
+        x = x + y
+        aux = aux + a
+    elif cfg.d_ff:
+        h = L.apply_norm(cfg, lp, x, "ln_mlp")
+        x = x + L.mlp_forward(cfg, lp["mlp"], h)
+    return x, aux, new_cache
+
+
+def _encoder_layer(cfg, lp, x, *, positions):
+    h = L.apply_norm(cfg, lp, x, "ln_attn")
+    out, _ = L.attention_forward(cfg, lp["attn"], h, positions=positions,
+                                 causal=False, window=0)
+    x = x + out
+    h = L.apply_norm(cfg, lp, x, "ln_mlp")
+    return x + L.mlp_forward(cfg, lp["mlp"], h)
+
+
+# --- full forward -----------------------------------------------------------------
+
+
+def encode(cfg, params, embeds):
+    """Encoder stack over precomputed frontend embeddings (B, T, d)."""
+    b, t, _ = embeds.shape
+    x = embeds.astype(_dt(cfg)) + params["enc_pos_embed"][None, :t]
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+
+    def body(carry, lp):
+        return _encoder_layer(cfg, lp, carry, positions=positions), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.apply_norm(cfg, params, x, "enc_ln_final")
+
+
+def _embed_tokens(cfg, params, tokens, positions):
+    x = params["embed"][tokens]
+    if cfg.max_position_embeddings:
+        pos = jnp.minimum(positions, cfg.max_position_embeddings - 1)
+        x = x + params["pos_embed"][pos]
+    return x
+
+
+def _logits(cfg, params, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (x.astype(jnp.float32) @ head.astype(jnp.float32))
+
+
+def forward(cfg, params, batch, *, mode: str = "train", cache=None,
+            cache_index=0):
+    """batch: {"tokens": (B,S) int32, optional "embeds": (B,T,d)}.
+
+    train/prefill: full-sequence causal pass; prefill also returns the filled
+    cache.  decode: tokens (B,1) against cache at cache_index.
+    Returns (logits, aux_loss, new_cache).
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s)) + cache_index
+    x = _embed_tokens(cfg, params, tokens, positions)
+
+    enc_out = None
+    if cfg.encoder_layers and mode != "decode":
+        enc_out = encode(cfg, params, batch["embeds"])
+    elif cfg.frontend == "vision_stub" and "embeds" in batch and mode != "decode":
+        x = jnp.concatenate([batch["embeds"].astype(x.dtype), x], axis=1)
+        s = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if mode in ("train", "prefill") and cache is None:
+        def body(carry, lp):
+            xc, aux = carry
+            xc, aux, _ = _decoder_layer(cfg, lp, xc, aux, positions=positions,
+                                        mode=mode, enc_out=enc_out)
+            return (xc, aux), None
+
+        if cfg.remat and mode == "train":
+            policy = (jax.checkpoint_policies.dots_saveable
+                      if getattr(cfg, "remat_policy", "dots") == "dots"
+                      else jax.checkpoint_policies.nothing_saveable)
+            body = jax.checkpoint(body, policy=policy)
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), params["layers"])
+        x = L.apply_norm(cfg, params, x, "ln_final")
+        logits = _logits(cfg, params, x)
+        return logits, aux, None
+
+    if mode == "prefill":
+        # fill the cache with a full pass (cache provided)
+        def body(carry, scanned):
+            xc, aux = carry
+            lp, cl = scanned
+            xc, aux, c_new = _decoder_layer(
+                cfg, lp, xc, aux, positions=positions, mode=mode,
+                cache_layer=cl, index=cache_index, enc_out=enc_out)
+            return (xc, aux), c_new
+
+        (x, aux), new_cache = jax.lax.scan(body, (x, aux0),
+                                           (params["layers"], cache))
+        x = L.apply_norm(cfg, params, x, "ln_final")
+        return _logits(cfg, params, x[:, -1:]), aux, new_cache
+
+    # decode
+    def body(carry, scanned):
+        xc, aux = carry
+        lp, cl = scanned
+        xc, aux, c_new = _decoder_layer(
+            cfg, lp, xc, aux, positions=positions, mode="decode",
+            cache_layer=cl, index=cache_index, enc_out=enc_out)
+        return (xc, aux), c_new
+
+    (x, aux), new_cache = jax.lax.scan(body, (x, aux0),
+                                       (params["layers"], cache))
+    x = L.apply_norm(cfg, params, x, "ln_final")
+    return _logits(cfg, params, x), aux, new_cache
+
+
+def fill_cross_cache(cfg, params, cache, enc_out):
+    """Precompute per-layer cross-attention K/V from encoder outputs."""
+    b, t, _ = enc_out.shape
+
+    def per_layer(lp, ck, cv):
+        k = (enc_out @ lp["cross"]["wk"]).reshape(b, t, cfg.n_kv_heads, cfg.d_head)
+        v = (enc_out @ lp["cross"]["wv"]).reshape(b, t, cfg.n_kv_heads, cfg.d_head)
+        return k.astype(ck.dtype), v.astype(cv.dtype)
+
+    k, v = jax.vmap(per_layer)(params["layers"], cache["cross_k"],
+                               cache["cross_v"])
+    out = dict(cache)
+    out["cross_k"], out["cross_v"] = k, v
+    return out

@@ -1,0 +1,157 @@
+"""Mamba-2 SSD (state-space duality) block — chunked training scan + O(1)
+single-token decode state update [arXiv:2405.21060].
+
+Scalar-per-head decay A (SSD restriction), H heads with head dim P and state
+size N:    h_t = a_t · h_{t-1} + B_t ⊗ (Δ_t x_t) ;   y_t = C_t · h_t + D x_t.
+
+Training uses the chunked dual form: intra-chunk quadratic term
+(L ∘ C Bᵀ)(Δx) with L[t,u] = Π_{u<v≤t} a_v, inter-chunk contribution via a
+lax.scan over the running state — the standard SSD decomposition,
+O(S·chunk·(P+N)) per head.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_params(cfg, rng, d_model=None):
+    d = d_model or cfg.d_model
+    h = cfg.ssm_heads
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    init = jax.nn.initializers.normal(0.02)
+    ks = jax.random.split(rng, 4)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "in_proj": init(ks[0], (d, 2 * d_in), dt),      # x and gate z
+        "bc_proj": init(ks[1], (d, 2 * n * h), dt),     # B, C per head
+        "dt_proj": init(ks[2], (d, h), dt),             # per-head Δ logits
+        "a_log": jnp.zeros((h,), jnp.float32),          # A = -exp(a_log)
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_proj": init(ks[3], (d_in, d), dt),
+    }
+
+
+def init_ssm_state(cfg, batch: int, d_model: int | None = None,
+                   dtype=jnp.float32):
+    d = d_model or cfg.d_model
+    p = cfg.ssm_expand * d // cfg.ssm_heads
+    return jnp.zeros((batch, cfg.ssm_heads, p, cfg.ssm_state), dtype)
+
+
+def ssd_forward(cfg, params, x, *, state=None):
+    """x: (B, S, d) -> (y (B, S, d), new_state (B, H, P, N))."""
+    b, s, d = x.shape
+    h = cfg.ssm_heads
+    d_in = cfg.ssm_expand * d
+    p = d_in // h
+    n = cfg.ssm_state
+
+    xz = x @ params["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)                    # (B,S,d_in) each
+    bc = x @ params["bc_proj"]
+    b_mat, c_mat = jnp.split(bc, 2, axis=-1)
+    b_mat = b_mat.reshape(b, s, h, n).astype(jnp.float32)
+    c_mat = c_mat.reshape(b, s, h, n).astype(jnp.float32)
+    xh = xs.reshape(b, s, h, p).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        x.astype(jnp.float32) @ params["dt_proj"].astype(jnp.float32))
+    a_neg = -jnp.exp(params["a_log"])                    # (H,) < 0
+    log_a = dt * a_neg                                   # (B,S,H) ≤ 0
+    xdt = xh * dt[..., None]                             # (B,S,H,P)
+
+    if state is None:
+        state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    if s == 1:
+        a1 = jnp.exp(log_a[:, 0])                        # (B,H)
+        bx = b_mat[:, 0, :, None, :] * xdt[:, 0, :, :, None]  # (B,H,P,N)
+        new_state = state * a1[:, :, None, None] + bx
+        y = jnp.einsum("bhpn,bhn->bhp", new_state, c_mat[:, 0])
+        y = y + params["d_skip"][None, :, None] * xh[:, 0]
+        y = y[:, None]                                   # (B,1,H,P)
+    else:
+        chunk = min(cfg.ssm_chunk, s)
+        if s % chunk:
+            chunk = s  # ragged sequence: single-chunk fallback (quadratic)
+        nc = s // chunk
+        la_c = log_a.reshape(b, nc, chunk, h)
+        b_c = b_mat.reshape(b, nc, chunk, h, n)
+        c_c = c_mat.reshape(b, nc, chunk, h, n)
+        xdt_c = xdt.reshape(b, nc, chunk, h, p)
+        cum = jnp.cumsum(la_c, axis=2)                   # inclusive (B,NC,T,H)
+
+        # intra-chunk: y[t] = Σ_{u<=t} exp(cum_t - cum_u) (C_t·B_u) Δx_u
+        scores = jnp.einsum("bgthn,bguhn->bgtuh", c_c, b_c)
+        li = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        l_mat = jnp.where(tri[None, None, :, :, None], jnp.exp(li), 0.0)
+        y_intra = jnp.einsum("bgtuh,bguhp->bgthp", scores * l_mat, xdt_c)
+
+        # end-of-chunk states: Σ_u exp(cum_T - cum_u) B_u ⊗ Δx_u
+        total = cum[:, :, -1, :]                          # (B,NC,H)
+        dec_end = jnp.exp(total[:, :, None, :] - cum)     # (B,NC,T,H)
+        chunk_state = jnp.einsum("bgth,bgthn,bgthp->bghpn",
+                                 dec_end, b_c, xdt_c)
+
+        def scan_fn(st, inp):
+            c_state, tot, c_chunk, cumv = inp             # leading axis = NC
+            dec0 = jnp.exp(cumv)                          # (B,T,H)
+            y_int = jnp.einsum("bthn,bhpn,bth->bthp", c_chunk, st, dec0)
+            st_new = st * jnp.exp(tot)[:, :, None, None] + c_state
+            return st_new, y_int
+
+        new_state, y_inter = jax.lax.scan(
+            scan_fn, state,
+            (chunk_state.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2),
+             c_c.transpose(1, 0, 2, 3, 4), cum.transpose(1, 0, 2, 3)))
+        y_inter = y_inter.transpose(1, 0, 2, 3, 4)
+        y = y_intra + y_inter + \
+            params["d_skip"][None, None, None, :, None] * \
+            xh.reshape(b, nc, chunk, h, p)
+        y = y.reshape(b, s, h, p)
+
+    y = y.reshape(b, -1, d_in)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ params["out_proj"], new_state
+
+
+# --- reference: naive sequential recurrence (oracle for tests) -----------------
+
+
+def ssd_reference(cfg, params, x, *, state=None):
+    """Step-by-step recurrence — O(S) sequential, used as the test oracle."""
+    b, s, d = x.shape
+    h = cfg.ssm_heads
+    d_in = cfg.ssm_expand * d
+    p = d_in // h
+    n = cfg.ssm_state
+    xz = x @ params["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    bc = x @ params["bc_proj"]
+    b_mat, c_mat = jnp.split(bc, 2, axis=-1)
+    b_mat = b_mat.reshape(b, s, h, n).astype(jnp.float32)
+    c_mat = c_mat.reshape(b, s, h, n).astype(jnp.float32)
+    xh = xs.reshape(b, s, h, p).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        x.astype(jnp.float32) @ params["dt_proj"].astype(jnp.float32))
+    a_t = jnp.exp(dt * (-jnp.exp(params["a_log"])))
+    if state is None:
+        state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(st, inp):
+        at, bt, ct, xt, dtt = inp
+        bx = bt[:, :, None, :] * (xt * dtt[..., None])[:, :, :, None]
+        st = st * at[:, :, None, None] + bx
+        y = jnp.einsum("bhpn,bhn->bhp", st, ct)
+        return st, y
+
+    st, ys = jax.lax.scan(step, state,
+                          (a_t.transpose(1, 0, 2), b_mat.transpose(1, 0, 2, 3),
+                           c_mat.transpose(1, 0, 2, 3), xh.transpose(1, 0, 2, 3),
+                           dt.transpose(1, 0, 2)))
+    ys = ys.transpose(1, 0, 2, 3) + params["d_skip"][None, None, :, None] * xh
+    y = ys.reshape(b, s, d_in)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ params["out_proj"], st

@@ -1,0 +1,112 @@
+"""Train / serve step factories over the model zoo.
+
+``make_train_step(cfg)``  → jit-able (params, opt_state, batch) -> (...)
+``make_prefill / make_decode_step`` → the serving path (KV/SSM caches).
+All steps are pure functions of pytrees — they lower and shard cleanly under
+pjit with the logical sharding rules in repro.launch.shardings.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean CE over valid positions; logits f32 (B, S, V), labels (B, S)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        mask = jnp.ones_like(ll)
+    mask = mask.astype(jnp.float32)
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_fn(cfg, params, batch, *, aux_weight: float = 0.01):
+    logits, aux, _ = M.forward(cfg, params, batch, mode="train")
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:
+        # modality prefix (VLM): loss only over the token tail
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    loss = cross_entropy(logits, labels, batch.get("loss_mask"))
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig = AdamWConfig()):
+    accum = max(int(getattr(cfg, "grad_accum", 1)), 1)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+        else:
+            # microbatched gradient accumulation: activations live for one
+            # microbatch only (global batch B → B/accum per fwd+bwd), cutting
+            # peak activation memory ~accum× at identical math (mean of
+            # per-microbatch grads == full-batch grad for mean losses).
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+
+            def one(carry, mb):
+                g_acc, l_acc = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    lambda p: loss_fn(cfg, p, mb), has_aux=True)(params)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / accum,
+                    g_acc, grads)
+                return (g_acc, l_acc + loss / accum), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), metrics_seq = jax.lax.scan(
+                one, (g0, jnp.zeros((), jnp.float32)), micro)
+            metrics = jax.tree.map(lambda m: m.mean(), metrics_seq)
+        params, opt_state, stats = adamw_update(opt_cfg, params, grads,
+                                                opt_state)
+        metrics = dict(metrics, loss=loss, **stats)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg):
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(cfg, params, batch)
+        return dict(metrics, loss=loss)
+    return eval_step
+
+
+def make_prefill(cfg, max_len: int):
+    def prefill(params, batch):
+        b = batch["tokens"].shape[0]
+        enc_len = batch["embeds"].shape[1] if cfg.encoder_layers else 0
+        cache = M.init_cache(cfg, b, max_len, enc_len=enc_len)
+        if cfg.encoder_layers:
+            enc_out = M.encode(cfg, params, batch["embeds"])
+            cache = M.fill_cross_cache(cfg, params, cache, enc_out)
+        logits, _, cache = M.forward(cfg, params, batch, mode="prefill",
+                                     cache=cache, cache_index=0)
+        return logits, cache
+
+    return prefill
+
+
+def make_decode_step(cfg):
+    def decode_step(params, cache, token, cache_index):
+        """token: (B, 1) int32; cache_index: scalar int32 position."""
+        logits, _, cache = M.forward(cfg, params, {"tokens": token},
+                                     mode="decode", cache=cache,
+                                     cache_index=cache_index)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], logits, cache
+
+    return decode_step
+
+
+def init_train_state(cfg, rng, opt_cfg: AdamWConfig = AdamWConfig()):
+    params = M.init_params(cfg, rng)
+    return params, init_opt_state(params)

@@ -1,0 +1,1 @@
+from repro.optim.adamw import AdamWConfig, init_opt_state, adamw_update, global_norm

@@ -1,0 +1,1 @@
+from repro.quant.aqt import QuantizedLinear, quantized_matmul, quantize_symmetric

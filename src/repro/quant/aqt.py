@@ -1,0 +1,68 @@
+"""The paper's arithmetic core applied to AI workloads: u8×s8 DotGeneral with
+``preferred_element_type=int32`` (the AQT-documented lowering of §5.1/§6.2)
+as a quantised matmul mode for LM projection layers.
+
+This is the *same* MXU path the crypto pipeline uses — the int32 (v5e/v5p) or
+fp32-mantissa (v4) accumulator semantics characterised in Table 1 — so the
+accumulator-exactness bound transfers: a K-dim reduction of u8×s8 products is
+bit-exact while K·(255·128) stays inside the window.  For inexact bf16 LMs
+this is a quantisation scheme (W8A8 symmetric); for the crypto engines it is
+an exactness guarantee.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.limb_gemm import MAX_PIXEL_PRODUCT, accumulator_window
+
+
+def quantize_symmetric(x, bits: int = 8, axis=-1):
+    """Per-channel symmetric quantisation -> (int8 codes, f32 scales)."""
+    xf = x.astype(jnp.float32)
+    maxval = jnp.max(jnp.abs(xf), axis=axis, keepdims=True)
+    scale = jnp.maximum(maxval, 1e-12) / (2 ** (bits - 1) - 1)
+    codes = jnp.clip(jnp.round(xf / scale), -(2 ** (bits - 1) - 1),
+                     2 ** (bits - 1) - 1).astype(jnp.int8)
+    return codes, scale
+
+
+def exact_k_bound(accum: str = "int32_native") -> int:
+    """Max contraction length with guaranteed-exact accumulation (Prop 5.1)."""
+    return accumulator_window(accum) // MAX_PIXEL_PRODUCT
+
+
+def quantized_matmul(x, w_codes, w_scale, *, accum: str = "int32_native"):
+    """(..., K) activations × (K, N) int8 weights via the AQT int32 path.
+
+    w_scale: (1, N) per-output-column scales (from quantize_symmetric axis=0).
+    """
+    x_codes, x_scale = quantize_symmetric(x, axis=-1)
+    if accum == "fp32_mantissa":
+        acc = jnp.dot(x_codes.astype(jnp.float32),
+                      w_codes.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+    else:
+        acc = jnp.dot(x_codes.astype(jnp.int32), w_codes.astype(jnp.int32),
+                      preferred_element_type=jnp.int32).astype(jnp.float32)
+    return acc * x_scale * w_scale
+
+
+class QuantizedLinear:
+    """W8A8 projection layer sharing the crypto pipeline's MXU discipline."""
+
+    def __init__(self, w, *, accum: str = "int32_native"):
+        self.codes, self.scale = quantize_symmetric(w, axis=0)  # per-out-col
+        self.accum = accum
+
+    def __call__(self, x):
+        x_codes, x_scale = quantize_symmetric(x, axis=-1)
+        if self.accum == "fp32_mantissa":
+            acc = jnp.dot(x_codes.astype(jnp.float32),
+                          self.codes.astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+        else:
+            acc = jnp.dot(x_codes.astype(jnp.int32),
+                          self.codes.astype(jnp.int32),
+                          preferred_element_type=jnp.int32).astype(jnp.float32)
+        return (acc * x_scale * self.scale).astype(x.dtype)

@@ -1,0 +1,3 @@
+from repro.runtime.compression import (quantize_int8, dequantize_int8,
+                                       compressed_grad_sync, init_error_state)
+from repro.runtime.fault_tolerance import FaultTolerantLoop, StepWatchdog

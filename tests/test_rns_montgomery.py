@@ -1,0 +1,163 @@
+"""ERNS chain + Shenoy–Kumaresan + digit-12 Montgomery REDC vs bignum oracles."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import field as F
+from repro.core import ntt as NTT
+from repro.core import rns as R
+from repro.core import wordarith as W
+
+CHAIN = R.make_chain(9)
+
+
+def test_chain_shape():
+    assert CHAIN.n == 8 and len(CHAIN.moduli) == 9
+    assert CHAIN.M.bit_length() >= 240
+    assert all((m - 1) % (1 << R.TWO_ADICITY) == 0 for m in CHAIN.moduli)
+    # redundant channel bound for SK: alpha < n < m_r
+    assert CHAIN.redundant > CHAIN.n
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**240))
+def test_rns_roundtrip_host(x):
+    x = x % CHAIN.M
+    res = R.to_rns_np(np.array([x], object), CHAIN)
+    back = R.from_rns_np(res, CHAIN)
+    assert back[0] == x
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**247))
+def test_sk_alpha_exact(x):
+    x = x % CHAIN.M
+    res = jnp.asarray(R.to_rns_np(np.array([x], object), CHAIN))
+    xi, alpha = R.sk_alpha(res, CHAIN)
+    # α must equal (Σ ξ_i·(M/m_i) − x) / M exactly
+    tot = sum(int(xi[0, i]) * (CHAIN.M // m) for i, m in enumerate(CHAIN.base))
+    assert (tot - x) % CHAIN.M == 0
+    assert int(alpha[0]) == (tot - x) // CHAIN.M
+    assert int(alpha[0]) < CHAIN.n
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**247))
+def test_rns_to_field_exact(x):
+    x = x % CHAIN.M
+    res = jnp.asarray(R.to_rns_np(np.array([x], object), CHAIN))
+    digits = R.rns_to_field(res, CHAIN)
+    got = W.digits_to_int(np.asarray(digits)[0])
+    assert got == x % CHAIN.p
+
+
+def test_rns_to_field_batch():
+    rng = np.random.default_rng(7)
+    xs = np.array([int.from_bytes(rng.bytes(30), "little") % CHAIN.M
+                   for _ in range(24)], object).reshape(4, 6)
+    res = jnp.asarray(R.to_rns_np(xs, CHAIN))
+    digits = np.asarray(R.rns_to_field(res, CHAIN))
+    for idx in np.ndindex(4, 6):
+        assert W.digits_to_int(digits[idx]) == xs[idx] % CHAIN.p
+
+
+# --- wordarith ---------------------------------------------------------------
+
+def test_normalize_digits_negative_ok():
+    # represents 5·β² − 3·β + 7, digits given denormal/negative
+    d = jnp.asarray(np.array([[7, -3, 5, 0, 0]], np.int32))
+    out = np.asarray(W.normalize_digits(d))
+    assert W.digits_to_int(out[0]) == 5 * W.BETA**2 - 3 * W.BETA + 7
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 2**31 - 1), min_size=3, max_size=3))
+def test_scalar_conv_accumulate(scalars):
+    consts = [123456789012345678901234567890123, 999, 2**200 - 1]
+    nd = 20
+    cd = np.stack([W.int_to_digits(c, nd) for c in consts])
+    sc = jnp.asarray(np.array([scalars], np.uint32))
+    acc = W.scalar_conv_accumulate(sc, jnp.asarray(cd), nd + 3)
+    out = W.normalize_digits(acc)
+    want = sum(s * c for s, c in zip(scalars, consts))
+    assert W.digits_to_int(np.asarray(out)[0]) == want
+
+
+def test_digits_to_words():
+    from repro.core import montgomery as MG
+    x = 0xDEADBEEF_CAFEBABE_0123456789ABCDEF
+    d = W.int_to_digits(x, 12)
+    words = np.asarray(MG.digits_to_words_u32(jnp.asarray(d[None, :])))[0]
+    got = 0
+    for w in range(len(words) - 1, -1, -1):
+        got = (got << 32) + int(words[w])
+    assert got == x
+
+
+# --- end-to-end multi-modular polynomial product (the real crypto semantics) --
+#
+# Negative intermediate values break redundant-channel consistency (c mod m_r
+# != (c mod M) mod m_r), so the sound construction is: non-negative CYCLIC
+# length-2d convolution per channel (convolution theorem, exact mod m_i),
+# SK+REDC per coefficient, then the negacyclic fold c_j = c'_j − c'_{d+j}
+# performed **in field space** (digits_submod_p).  See DESIGN.md §2.
+
+def _poly_product_int(a, b):
+    """Plain (acyclic) polynomial product over ℤ, length 2d."""
+    d = len(a)
+    c = [0] * (2 * d)
+    for i in range(d):
+        for j in range(d):
+            c[i + j] += a[i] * b[j]
+    return c
+
+
+@pytest.mark.parametrize("n_channels,p_target", [
+    (9, 1267650600228229401496703205653),   # 100-bit prime, paper chain width
+    (18, F.BN254_FR),                       # full-range BN254 (extended chain)
+])
+def test_multimodular_polymul_exact(n_channels, p_target):
+    chain = R.make_chain(n_channels, p=p_target)
+    d = 16
+    rng = np.random.default_rng(3)
+    a = [int.from_bytes(rng.bytes(32), "little") % p_target for _ in range(d)]
+    b = [int.from_bytes(rng.bytes(32), "little") % p_target for _ in range(d)]
+    c_int = _poly_product_int(a, b)
+    assert max(c_int) < chain.M, "test must stay in the exactness envelope"
+    want_nega = [(c_int[k] - (c_int[k + d] if k + d < 2 * d else 0)) % p_target
+                 for k in range(d)]
+
+    d2 = 2 * d
+    a_res = R.to_rns_np(np.array(a + [0] * d, object), chain)   # (2d, C)
+    b_res = R.to_rns_np(np.array(b + [0] * d, object), chain)
+    out_res = np.zeros((d2, len(chain.moduli)), np.uint32)
+    for ci, m in enumerate(chain.moduli):
+        w = NTT.ntt_matrix(d2, m)
+        wi = NTT.intt_matrix(d2, m)
+        fa = NTT.matrix_ntt_oracle_np(a_res[None, :, ci], w, m)[0]
+        fb = NTT.matrix_ntt_oracle_np(b_res[None, :, ci], w, m)[0]
+        prod = (fa.astype(object) * fb.astype(object)) % m
+        out_res[:, ci] = NTT.matrix_ntt_oracle_np(prod[None, :], wi, m)[0]
+    digits = R.rns_to_field(jnp.asarray(out_res), chain)
+    # cyclic length-2d conv of zero-padded inputs == acyclic product (exact):
+    for k in range(d2):
+        assert W.digits_to_int(np.asarray(digits)[k]) == c_int[k] % p_target
+    # negacyclic fold in field space:
+    folded = W.digits_submod_p(digits[:d], digits[d:],
+                               jnp.asarray(chain.p_digits))
+    for k in range(d):
+        assert W.digits_to_int(np.asarray(folded)[k]) == want_nega[k]
+
+
+def test_digits_submod_p():
+    chain = CHAIN
+    rng = np.random.default_rng(11)
+    a = [int.from_bytes(rng.bytes(31), "little") % chain.p for _ in range(8)]
+    b = [int.from_bytes(rng.bytes(31), "little") % chain.p for _ in range(8)]
+    nd = chain.n_red_digits
+    ad = jnp.asarray(np.stack([W.int_to_digits(x, nd) for x in a]))
+    bd = jnp.asarray(np.stack([W.int_to_digits(x, nd) for x in b]))
+    out = np.asarray(W.digits_submod_p(ad, bd, jnp.asarray(chain.p_digits)))
+    for k in range(8):
+        assert W.digits_to_int(out[k]) == (a[k] - b[k]) % chain.p
