@@ -1,0 +1,63 @@
+"""Online multi-tenant serving demo (the paper's system with live ingress):
+
+load generator → admission control → continuous rectangular batcher →
+co-scheduled dispatch → per-tenant results + telemetry, including a
+deliberately overloaded tenant to show rate limiting and backpressure.
+
+  PYTHONPATH=src python examples/online_serving.py [--duration 0.02]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import workloads as WK
+from repro.core.scheduler import PoissonTrace
+from repro.serve import CryptoServer, LoadGenerator, ServeConfig
+from repro.serve.client import attach_payloads
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--duration", type=float, default=0.02)
+ap.add_argument("--rate", type=float, default=1024)
+args = ap.parse_args()
+
+# --- serve a Poisson trace through the online runtime --------------------------
+server = CryptoServer(ServeConfig(n_c=8, max_age_s=0.005, validate=False))
+gen = LoadGenerator(PoissonTrace(rate_hz=args.rate, duration_s=args.duration,
+                                 seed=7))
+load = gen.run(server)
+snap = server.telemetry.snapshot()
+print(f"served {load.n_served}/{len(load.handles)} requests in "
+      f"{snap['batches']} batches "
+      f"(close reasons: {snap['close_reasons']})")
+print(f"occupancy K={snap['k_occupancy_mean']:.3f} "
+      f"M={snap['m_occupancy_mean']:.3f}; "
+      f"p50={snap['latency']['p50_s']*1e3:.2f}ms "
+      f"p99={snap['latency']['p99_s']*1e3:.2f}ms")
+
+# --- verify one tenant against isolated evaluation -----------------------------
+done = [h for h in load.handles if h.done() and not h.rejected
+        and h.request.workload == "dilithium"]
+h = done[0]
+eng = WK.DilithiumEngine(server.batcher.bucket_for(h.request.degree))
+iso = np.zeros((1, eng.d), np.uint32)
+iso[0, : h.request.degree] = h.request.coeffs
+assert np.array_equal(h.result(), eng.oracle_np(iso)[0])
+print("isolation check: online batched result == isolated evaluation ✓")
+
+# --- overload one tenant to trip the rate limiter ------------------------------
+server2 = CryptoServer(ServeConfig(n_c=8, max_age_s=0.005, validate=False,
+                                   tenant_rate_hz=100.0, tenant_burst=4))
+trace = [r for r in PoissonTrace(rate_hz=512, duration_s=0.05,
+                                 seed=11).generate()]
+for r in trace:
+    r.tenant_id = 0                        # one noisy tenant hammers the API
+attach_payloads(trace, seed=11)
+rejections = 0
+for r in trace:
+    h = server2.submit(r, now=r.arrival_time)
+    rejections += h.rejected
+server2.drain(trace[-1].arrival_time if trace else 0.0)
+counts = server2.telemetry.admission_counts
+print(f"noisy tenant: {counts.get('ok', 0)} admitted, "
+      f"{counts.get('rate_limited', 0)} rate-limited "
+      f"(token bucket 100 req/s, burst 4) — neighbours stay unharmed")

@@ -13,5 +13,7 @@ with workload-zone tags carried into the HLO for the post-hoc validator.
 """
 from repro.core.scheduler.queue import TenantRequest, PoissonTrace, IngressQueue
 from repro.core.scheduler.rectangular import (RectangularScheduler,
-                                              StackedBatch, packing_metrics)
+                                              StackedBatch, packing_metrics,
+                                              bucket_degree, bucket_pow2,
+                                              stack_rows)
 from repro.core.scheduler.coscheduler import SliceCoScheduler

@@ -28,8 +28,11 @@ from repro.core.scheduler.rectangular import StackedBatch
 @dataclasses.dataclass
 class DispatchResult:
     batch: StackedBatch
-    outputs: dict          # tenant_id -> result rows (numpy)
+    outputs: dict          # tenant_id -> result rows (numpy; last-wins if a
+                           # tenant has several rows — use `rows` to route by
+                           # position)
     stats: dict
+    rows: object = None    # (n_rows, ...) result array, batch row order
 
 
 class SliceCoScheduler:
@@ -50,6 +53,11 @@ class SliceCoScheduler:
             for w, devs in assignment.items()
         }
         self._engines: dict = {}
+        self._jitted: dict = {}
+        # (workload, d_bucket) -> number of times XLA retraced the program.
+        # Incremented inside the traced body, so cached executions leave it
+        # untouched; one count per distinct operand shape is the healthy state.
+        self.trace_counts: dict = {}
 
     def engine_for(self, workload: str, d: int):
         key = (workload, d)
@@ -57,6 +65,21 @@ class SliceCoScheduler:
             self._engines[key] = WK.make_engine(
                 workload, d, accum=self.accum, reduction=self.reduction)
         return self._engines[key]
+
+    def jitted_for(self, workload: str, d: int):
+        """One compiled e2e program per (workload, d_bucket), reused across
+        dispatches — rebuilding ``jax.jit(eng.e2e)`` per dispatch discards the
+        executable cache and recompiles every batch."""
+        key = (workload, d)
+        if key not in self._jitted:
+            eng = self.engine_for(workload, d)
+
+            def _e2e(operand, _eng=eng, _key=key):
+                self.trace_counts[_key] = self.trace_counts.get(_key, 0) + 1
+                return _eng.e2e(operand)
+
+            self._jitted[key] = jax.jit(_e2e)
+        return self._jitted[key]
 
     def _shard(self, workload: str, operand: jnp.ndarray):
         mesh = self._meshes[workload]
@@ -68,8 +91,9 @@ class SliceCoScheduler:
             spec = P()
         return jax.device_put(operand, NamedSharding(mesh, spec))
 
-    def dispatch(self, batch: StackedBatch) -> DispatchResult:
-        """Execute one stacked batch on its workload's device group."""
+    def _launch(self, batch: StackedBatch):
+        """Enqueue one stacked batch on its workload's device group and return
+        the in-flight device result without materialising it."""
         eng = self.engine_for(batch.workload, batch.d_bucket)
         if batch.workload == "dilithium":
             operand = jnp.asarray(batch.operand)            # (N_c, d)
@@ -79,14 +103,25 @@ class SliceCoScheduler:
             else:
                 operand = jnp.asarray(batch.operand)        # (N_c, d, C)
         operand = self._shard(batch.workload, operand)
-        out = jax.jit(eng.e2e)(operand)
+        out = self.jitted_for(batch.workload, batch.d_bucket)(operand)
+        return batch, eng, out
+
+    def _materialise(self, batch: StackedBatch, eng, out) -> DispatchResult:
         res = np.asarray(out)
         outputs = {r.tenant_id: res[i] for i, r in enumerate(batch.requests)}
         return DispatchResult(batch=batch, outputs=outputs,
-                              stats=dict(getattr(eng, "last_stats", {}) or {}))
+                              stats=dict(getattr(eng, "last_stats", {}) or {}),
+                              rows=res)
+
+    def dispatch(self, batch: StackedBatch) -> DispatchResult:
+        """Execute one stacked batch on its workload's device group."""
+        return self._materialise(*self._launch(batch))
 
     def dispatch_mixed(self, batches: list[StackedBatch]) -> list[DispatchResult]:
         """Concurrent heterogeneous dispatch: per-class programs launched
         back-to-back; XLA queues them on disjoint device groups so Dilithium
-        and BN254 batches overlap on real multi-device slices."""
-        return [self.dispatch(b) for b in batches]
+        and BN254 batches overlap on real multi-device slices.  All launches
+        happen before any host transfer — materialising between launches
+        would serialise the groups behind a blocking ``np.asarray``."""
+        inflight = [self._launch(b) for b in batches]
+        return [self._materialise(*f) for f in inflight]

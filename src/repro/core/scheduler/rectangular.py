@@ -45,6 +45,15 @@ def bucket_pow2(d: int, floor: int = 64) -> int:
     return max(floor, 1 << (d - 1).bit_length())
 
 
+def select_bucket(d: int, granularity: int | None = None) -> int:
+    """The one bucketing policy shared by offline planning and the online
+    batcher: pow2 (execution path) unless a granularity selects the paper's
+    Table-5 convention."""
+    if granularity is None:
+        return bucket_pow2(d)
+    return bucket_degree(d, granularity)
+
+
 @dataclasses.dataclass(frozen=True)
 class PackingMetrics:
     batch_fill: float        # Σ d_i / (N_c · d̂)  — active cells per row
@@ -86,6 +95,27 @@ def block_diagonal_zero_fraction(degrees: list[int]) -> float:
     return 1.0 - sum(d * d for d in degrees) / (s * s)
 
 
+def stack_rows(reqs: list, d_bucket: int,
+               n_rows: int | None = None) -> np.ndarray | None:
+    """Assemble tenant payloads into a dense ``n_rows × d_bucket`` operand.
+
+    Each request's coefficients fill row i up to its degree; the remainder is
+    zero padding.  ``n_rows`` > len(reqs) appends all-zero rows so every batch
+    of a (workload, bucket) class shares one operand shape — the online
+    batcher uses this to keep the co-scheduler's compiled-program cache warm.
+    Returns None for metadata-only requests (dry-run / trace replay).
+    """
+    if not reqs or any(r.coeffs is None for r in reqs):
+        return None
+    payload = reqs[0].coeffs
+    rows = len(reqs) if n_rows is None else max(n_rows, len(reqs))
+    shape = (rows, d_bucket) + payload.shape[1:]
+    a = np.zeros(shape, np.uint32)
+    for i, r in enumerate(reqs):
+        a[i, : r.degree] = r.coeffs
+    return a
+
+
 class RectangularScheduler:
     """Builds dense stacked operands from a workload-homogeneous queue."""
 
@@ -96,16 +126,14 @@ class RectangularScheduler:
         self.n_c = n_c
         self.granularity = bucket_granularity
 
-    def _bucket(self, d: int) -> int:
-        if self.granularity is None:
-            return bucket_pow2(d)
-        return bucket_degree(d, self.granularity)
+    def bucket_for(self, d: int) -> int:
+        return select_bucket(d, self.granularity)
 
     def plan_batches(self, requests: list[TenantRequest]) -> list[StackedBatch]:
         """Group by (workload, bucket) and cut into N_c-row stacked batches."""
         groups: dict[tuple, list[TenantRequest]] = {}
         for r in requests:
-            key = (r.workload, self._bucket(r.degree))
+            key = (r.workload, self.bucket_for(r.degree))
             groups.setdefault(key, []).append(r)
         batches = []
         for (workload, d_bucket), reqs in sorted(groups.items()):
@@ -117,15 +145,7 @@ class RectangularScheduler:
         return batches
 
     def _assemble(self, reqs: list[TenantRequest], d_bucket: int):
-        if any(r.coeffs is None for r in reqs):
-            return None  # metadata-only planning (dry-run / trace replay)
-        payload = reqs[0].coeffs
-        extra = payload.shape[1:][1:]  # channel dims beyond degree axis
-        shape = (len(reqs), d_bucket) + payload.shape[1:]
-        a = np.zeros(shape, np.uint32)
-        for i, r in enumerate(reqs):
-            a[i, : r.degree] = r.coeffs
-        return a
+        return stack_rows(reqs, d_bucket)
 
     def unstack(self, batch: StackedBatch, result: np.ndarray) -> dict[int, np.ndarray]:
         """Route batched rows back to tenants (isomorphic to isolated eval)."""

@@ -186,7 +186,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool,
         record.update(extra)
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis() or {}
+        cost = HC.xla_cost_dict(compiled)
         hlo = compiled.as_text()
         coll = HA.collective_bytes(hlo)
         record["memory"] = {

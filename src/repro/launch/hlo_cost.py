@@ -210,3 +210,12 @@ class HloCost:
 
 def corrected_cost(hlo_text: str) -> dict:
     return HloCost(hlo_text).analyze()
+
+
+def xla_cost_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a dict across jax versions (0.4.x
+    returns a one-element list)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca

@@ -1,8 +1,10 @@
-"""Serving launcher — two modes:
+"""Serving launcher — three modes:
 
-* ``--mode crypto``: the Aegis multi-tenant sequencer (the paper's system):
+* ``--mode crypto``: offline replay of the Aegis multi-tenant sequencer:
   Poisson ingress → Tier-1 rectangular batching → Tier-2 co-scheduled
   dispatch → per-tenant results, with HLO validation before first dispatch.
+* ``--mode crypto-online``: the :mod:`repro.serve` runtime — live submit →
+  admission → continuous batcher → dispatch closed loop with telemetry JSON.
 * ``--mode lm``: batched LM serving (prefill + greedy decode) for any arch.
 """
 from __future__ import annotations
@@ -42,30 +44,21 @@ def serve_lm(cfg, *, batch=2, prompt_len=16, decode_steps=8, seed=0):
 
 
 def serve_crypto(*, duration_s=0.05, rate_hz=2048, n_c=8, d_uniform=None,
-                 seed=0, validate=True, accum="fp32_mantissa"):
+                 seed=0, validate=True, accum="fp32_mantissa",
+                 coscheduler=None):
     from repro.core.scheduler import (IngressQueue, PoissonTrace,
                                       RectangularScheduler)
     from repro.core.scheduler.coscheduler import SliceCoScheduler
     from repro.core import validator as V
-    from repro.core import workloads as WK
+    from repro.serve.client import attach_payloads
 
     trace = PoissonTrace(rate_hz=rate_hz, duration_s=duration_s,
                          uniform_degree=d_uniform, seed=seed).generate()
-    rng = np.random.default_rng(seed)
-    for r in trace:  # attach payloads
-        if r.workload == "dilithium":
-            r.coeffs = np.asarray(rng.integers(
-                0, 8380417, r.degree, dtype=np.uint64), np.uint32)
-        else:
-            eng = WK.make_engine("bn254", 64, accum=accum)
-            r.degree = min(r.degree, 64)  # CPU-budget BN254 rows
-            vals = np.array([int(x) for x in
-                             rng.integers(0, 2**31, r.degree)], object)
-            r.coeffs = np.asarray(eng.ingest(vals))
+    attach_payloads(trace, seed=seed, accum=accum)
     q = IngressQueue()
     q.push_trace(trace)
     sched = RectangularScheduler(n_c=n_c)
-    cos = SliceCoScheduler(accum=accum)
+    cos = coscheduler or SliceCoScheduler(accum=accum)
     results, n_ops = [], 0
     t0 = time.time()
     validated = set()
@@ -88,21 +81,81 @@ def serve_crypto(*, duration_s=0.05, rate_hz=2048, n_c=8, d_uniform=None,
     return results, n_ops, dt
 
 
+def serve_crypto_online(*, duration_s=0.05, rate_hz=2048, n_c=8,
+                        max_age_s=0.005, d_uniform=None, seed=0,
+                        validate=True, accum="fp32_mantissa",
+                        max_pending=1024, tenant_rate_hz=None,
+                        slo_deadline_s=None, occupancy_close=None,
+                        telemetry_out=None, realtime=False, coscheduler=None):
+    """Closed loop over the online runtime: load generator → admission →
+    continuous batcher → co-scheduled dispatch → per-tenant results."""
+    from repro.core.scheduler import PoissonTrace
+    from repro.serve import CryptoServer, LoadGenerator, ServeConfig
+
+    cfg = ServeConfig(n_c=n_c, max_age_s=max_age_s, validate=validate,
+                      accum=accum, max_pending=max_pending,
+                      tenant_rate_hz=tenant_rate_hz,
+                      slo_deadline_s=slo_deadline_s,
+                      occupancy_close=occupancy_close)
+    server = CryptoServer(cfg, coscheduler=coscheduler)
+    gen = LoadGenerator(PoissonTrace(rate_hz=rate_hz, duration_s=duration_s,
+                                     uniform_degree=d_uniform, seed=seed),
+                        seed=seed, accum=accum)
+    t0 = time.time()
+    load = gen.run(server, realtime=realtime)
+    dt = time.time() - t0
+    snap = (server.telemetry.write_json(telemetry_out) if telemetry_out
+            else server.telemetry.snapshot())
+    return load, snap, dt
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["crypto", "lm"], default="crypto")
+    ap.add_argument("--mode", choices=["crypto", "crypto-online", "lm"],
+                    default="crypto")
     ap.add_argument("--arch", default="olmo_1b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--decode-steps", type=int, default=8)
     ap.add_argument("--duration", type=float, default=0.05)
+    ap.add_argument("--rate", type=float, default=2048)
+    ap.add_argument("--n-c", type=int, default=8)
+    ap.add_argument("--max-age-ms", type=float, default=5.0)
+    ap.add_argument("--tenant-rate", type=float, default=None,
+                    help="per-tenant token-bucket rate (req/s)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="reject requests predicted to queue past this deadline")
+    ap.add_argument("--telemetry-out", default=None,
+                    help="write the telemetry snapshot JSON here")
+    ap.add_argument("--realtime", action="store_true",
+                    help="pace submissions in wall time (default: virtual clock)")
     args = ap.parse_args()
 
     if args.mode == "lm":
         cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
         toks, dt = serve_lm(cfg, decode_steps=args.decode_steps)
         print(f"decoded {toks.shape} tokens in {dt:.2f}s")
+    elif args.mode == "crypto-online":
+        load, snap, dt = serve_crypto_online(
+            duration_s=args.duration, rate_hz=args.rate, n_c=args.n_c,
+            max_age_s=args.max_age_ms / 1e3, tenant_rate_hz=args.tenant_rate,
+            slo_deadline_s=None if args.slo_ms is None else args.slo_ms / 1e3,
+            telemetry_out=args.telemetry_out, realtime=args.realtime)
+        lat = snap["latency"]
+        print(f"online: served {load.n_served}/{len(load.handles)} requests "
+              f"({len(load.rejected)} rejected) in {dt:.2f}s wall, "
+              f"{snap['batches']} batches "
+              f"[{', '.join(f'{k}:{v}' for k, v in snap['close_reasons'].items())}]")
+        print(f"occupancy: K={snap['k_occupancy_mean']:.3f} "
+              f"M={snap['m_occupancy_mean']:.3f}, "
+              f"queue depth mean={snap['queue_depth_mean']:.1f} "
+              f"max={snap['queue_depth_max']}")
+        print(f"latency: p50={lat['p50_s']*1e3:.2f}ms "
+              f"p95={lat['p95_s']*1e3:.2f}ms p99={lat['p99_s']*1e3:.2f}ms")
+        if args.telemetry_out:
+            print(f"telemetry JSON → {args.telemetry_out}")
     else:
-        results, n_ops, dt = serve_crypto(duration_s=args.duration)
+        results, n_ops, dt = serve_crypto(duration_s=args.duration,
+                                          rate_hz=args.rate, n_c=args.n_c)
         print(f"sequencer: {n_ops} tenant ops in {dt:.2f}s "
               f"({n_ops/dt:.0f} ops/s this-hardware), "
               f"{len(results)} stacked batches dispatched, HLO-validated")

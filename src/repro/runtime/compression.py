@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.runtime.shardmap_compat import shard_map
+
 
 def quantize_int8(x):
     """f32/bf16 tensor -> (int8 codes, f32 scale)."""
@@ -58,8 +60,8 @@ def compressed_grad_sync(grads, error_state, *, mesh, axis: str = "pod"):
 
         other = tuple(a for a in mesh.axis_names if a != axis)
         spec = P()  # replicated leaves across the pod axis
-        fn = jax.shard_map(inner, mesh=mesh, in_specs=(spec, spec),
-                           out_specs=(spec, spec), check_vma=False)
+        fn = shard_map(inner, mesh=mesh, in_specs=(spec, spec),
+                       out_specs=(spec, spec))
         return fn(g, err)
 
     flat_g, treedef = jax.tree.flatten(grads)

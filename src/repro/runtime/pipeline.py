@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.runtime.shardmap_compat import shard_map
+
 
 def pipeline_forward(stage_fn, stage_params, x_microbatches, *, mesh,
                      axis: str = "pod"):
@@ -72,10 +74,9 @@ def pipeline_forward(stage_fn, stage_params, x_microbatches, *, mesh,
         return outputs
 
     other = tuple(a for a in mesh.axis_names if a != axis)
-    fn = jax.shard_map(
+    fn = shard_map(
         per_device, mesh=mesh,
-        in_specs=(P(axis), P()), out_specs=P(),
-        check_vma=False)
+        in_specs=(P(axis), P()), out_specs=P())
     return fn(stage_params, x_microbatches)
 
 

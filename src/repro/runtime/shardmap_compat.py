@@ -1,0 +1,27 @@
+"""Version-portable ``shard_map``.
+
+``jax.shard_map`` (with ``check_vma``) only exists in newer releases; the
+pinned jaxlib in the accelerator image ships the experimental spelling with
+the ``check_rep`` keyword.  Callers use :func:`shard_map` here and never
+touch the version split.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs, check: bool = False):
+    # The keyword rename (check_rep → check_vma) and the promotion to the
+    # top-level namespace happened in different releases, so probe the
+    # keyword rather than tying it to where the function lives.
+    try:
+        return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check)
+    except TypeError:
+        return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check)

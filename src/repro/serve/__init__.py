@@ -1,0 +1,22 @@
+"""repro.serve — online multi-tenant serving runtime (the paper, productionised).
+
+Converts the offline measurement pipeline (Poisson replay → Tier-1 stacking
+→ Tier-2 dispatch) into a server with live ingress:
+
+* :mod:`server`    — ``CryptoServer`` event loop: submit → handle, explicit-
+  clock flush policy, graceful drain;
+* :mod:`admission` — queue-bound / per-tenant token-bucket / SLO gates with
+  backpressure signalling;
+* :mod:`batcher`   — continuous rectangular batcher (close on N_c-full, age
+  timeout, or occupancy threshold);
+* :mod:`telemetry` — K/M occupancy, queue depth, p50/p95/p99 latency, JSON
+  export for ``BENCH_*`` tracking;
+* :mod:`client`    — synthetic load generator (virtual or real-time pacing).
+"""
+from repro.serve.admission import (AdmissionController, AdmissionDecision,
+                                   TokenBucket)
+from repro.serve.batcher import ContinuousBatcher, ClosedBatch
+from repro.serve.client import LoadGenerator, LoadResult, attach_payloads
+from repro.serve.server import (CryptoServer, RejectedError, ResponseHandle,
+                                ServeConfig)
+from repro.serve.telemetry import BatchRecord, LatencyHistogram, Telemetry

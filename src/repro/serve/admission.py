@@ -1,0 +1,110 @@
+"""SLO-aware admission control and per-tenant rate limiting.
+
+Online serving must bound *queueing*, not just throughput: once the offered
+load exceeds the slice's service rate, every admitted request inflates the
+tail latency of all tenants (the paper's §7.4 regime where TPU BN254
+throughput is 3 orders below GPU baselines — overload is the common case,
+not the exception).  The controller rejects early with a machine-readable
+reason and a retry-after hint so clients can back off instead of timing out.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+class TokenBucket:
+    """Classic token bucket: ``rate_hz`` sustained, ``burst`` peak."""
+
+    def __init__(self, rate_hz: float, burst: float):
+        self.rate_hz = float(rate_hz)
+        self.burst = float(burst)
+        self.tokens = float(burst)
+        self._t_last: float | None = None
+
+    def _refill(self, now: float):
+        if self._t_last is not None and now > self._t_last:
+            self.tokens = min(self.burst,
+                              self.tokens + (now - self._t_last) * self.rate_hz)
+        self._t_last = now if self._t_last is None else max(self._t_last, now)
+
+    def try_take(self, now: float, n: float = 1.0) -> bool:
+        self._refill(now)
+        if self.tokens >= n:
+            self.tokens -= n
+            return True
+        return False
+
+    def time_until(self, n: float = 1.0) -> float:
+        """Seconds until ``n`` tokens accumulate (0 if available now)."""
+        deficit = n - self.tokens
+        return max(0.0, deficit / self.rate_hz) if self.rate_hz > 0 else float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionDecision:
+    admitted: bool
+    reason: str              # "ok" | "queue_full" | "rate_limited" | "slo_miss"
+    retry_after_s: float = 0.0
+
+
+ADMIT = AdmissionDecision(True, "ok")
+
+
+class AdmissionController:
+    """Three gates: queue bound, SLO estimate, then the tenant bucket.
+
+    The SLO gate predicts this request's queueing delay as
+    ``pending / service_rate`` using an EWMA of observed dispatch throughput;
+    requests that would already be late on arrival are rejected immediately
+    (better a fast 429 than a slow success past its deadline).  The token
+    bucket runs last so server-side rejections never debit a tenant's rate
+    budget — only requests the server could actually take consume tokens.
+    """
+
+    def __init__(self, *, max_pending: int = 1024,
+                 tenant_rate_hz: float | None = None,
+                 tenant_burst: float = 8.0,
+                 slo_deadline_s: float | None = None,
+                 service_rate_init: float = 1024.0,
+                 ewma_alpha: float = 0.3):
+        self.max_pending = max_pending
+        self.tenant_rate_hz = tenant_rate_hz
+        self.tenant_burst = tenant_burst
+        self.slo_deadline_s = slo_deadline_s
+        self.service_rate = float(service_rate_init)   # ops/s, EWMA-updated
+        self.ewma_alpha = ewma_alpha
+        self._buckets: dict[int, TokenBucket] = {}
+
+    def observe_service(self, n_ops: int, elapsed_s: float):
+        """Fold a completed dispatch into the service-rate estimate."""
+        if elapsed_s <= 0 or n_ops <= 0:
+            return
+        rate = n_ops / elapsed_s
+        a = self.ewma_alpha
+        self.service_rate = (1 - a) * self.service_rate + a * rate
+
+    def estimated_wait_s(self, pending: int) -> float:
+        return pending / self.service_rate if self.service_rate > 0 else float("inf")
+
+    def backpressure(self, pending: int, *, high_watermark: float = 0.8) -> bool:
+        """Soft signal: queue above the watermark — clients should slow down
+        before hard rejections begin."""
+        return pending >= high_watermark * self.max_pending
+
+    def admit(self, req, now: float, pending: int) -> AdmissionDecision:
+        if pending >= self.max_pending:
+            return AdmissionDecision(False, "queue_full",
+                                     retry_after_s=self.estimated_wait_s(pending))
+        if self.slo_deadline_s is not None:
+            wait = self.estimated_wait_s(pending)
+            if wait > self.slo_deadline_s:
+                return AdmissionDecision(False, "slo_miss", retry_after_s=wait)
+        if self.tenant_rate_hz is not None:
+            bucket = self._buckets.get(req.tenant_id)
+            if bucket is None:
+                bucket = self._buckets[req.tenant_id] = TokenBucket(
+                    self.tenant_rate_hz, self.tenant_burst)
+            if not bucket.try_take(now):
+                return AdmissionDecision(False, "rate_limited",
+                                         retry_after_s=bucket.time_until())
+        return ADMIT

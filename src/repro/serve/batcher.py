@@ -1,0 +1,125 @@
+"""Continuous rectangular batching.
+
+The offline Tier-1 scheduler (:mod:`repro.core.scheduler.rectangular`) plans
+batches from a complete queue snapshot.  Online, requests trickle in, so the
+batcher keeps one *open* batch per (workload, degree-bucket) class and closes
+it on whichever trigger fires first:
+
+* **full** — N_c rows stacked (M-dimension occupancy target reached);
+* **occupancy** — active-cell fraction of the would-be operand crossed the
+  configured threshold (useful work dominates padding even with < N_c rows);
+* **age** — the oldest row has waited ``max_age_s`` (latency SLO beats
+  occupancy once a request has aged);
+* **drain** — server shutdown flushes everything.
+
+Closed batches are ordinary :class:`StackedBatch` objects, so Tier-2 dispatch
+and the paper's packing metrics apply unchanged.  With ``pad_rows`` (default)
+operands are padded with zero rows to the full ``N_c × d̂`` shape so every
+batch of a class hits the co-scheduler's compiled-program cache; zero rows
+transform to zero rows and are never routed back to any tenant.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.scheduler.rectangular import (StackedBatch, select_bucket,
+                                              stack_rows)
+
+CLOSE_FULL = "full"
+CLOSE_AGE = "age"
+CLOSE_OCCUPANCY = "occupancy"
+CLOSE_DRAIN = "drain"
+
+
+@dataclasses.dataclass
+class _OpenBatch:
+    workload: str
+    d_bucket: int
+    requests: list
+    opened_at: float
+    sum_degrees: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ClosedBatch:
+    batch: StackedBatch
+    reason: str
+    age_s: float             # oldest-row residency at close time
+
+
+class ContinuousBatcher:
+    def __init__(self, *, n_c: int = 8,
+                 bucket_granularity: int | None = None,
+                 max_age_s: float = 0.01,
+                 occupancy_close: float | None = None,
+                 pad_rows: bool = True):
+        self.n_c = n_c
+        self.granularity = bucket_granularity
+        self.max_age_s = max_age_s
+        self.occupancy_close = occupancy_close
+        self.pad_rows = pad_rows
+        self._open: dict[tuple, _OpenBatch] = {}
+        self._depth = 0
+
+    # --- introspection --------------------------------------------------------
+
+    @property
+    def depth(self) -> int:
+        """Pending (accepted, not yet dispatched) request count."""
+        return self._depth
+
+    def oldest_age(self, now: float) -> float:
+        if not self._open:
+            return 0.0
+        return max(now - ob.opened_at for ob in self._open.values())
+
+    def bucket_for(self, d: int) -> int:
+        return select_bucket(d, self.granularity)
+
+    # --- the three online triggers --------------------------------------------
+
+    def add(self, req, now: float) -> list[ClosedBatch]:
+        """Stack one request; return any batch this add closed."""
+        key = (req.workload, self.bucket_for(req.degree))
+        ob = self._open.get(key)
+        if ob is None:
+            ob = self._open[key] = _OpenBatch(
+                workload=key[0], d_bucket=key[1], requests=[], opened_at=now)
+        ob.requests.append(req)
+        ob.sum_degrees += req.degree
+        self._depth += 1
+        if len(ob.requests) >= self.n_c:
+            return [self._close(key, CLOSE_FULL, now)]
+        if self.occupancy_close is not None:
+            occ = ob.sum_degrees / (self.n_c * ob.d_bucket)
+            if occ >= self.occupancy_close:
+                return [self._close(key, CLOSE_OCCUPANCY, now)]
+        return []
+
+    def poll(self, now: float) -> list[ClosedBatch]:
+        """Close every open batch whose oldest row has exceeded max_age_s."""
+        # Same float expression as next_deadline(): pumping exactly at the
+        # returned deadline must close the batch that produced it.
+        due = [key for key, ob in self._open.items()
+               if now >= ob.opened_at + self.max_age_s]
+        return [self._close(key, CLOSE_AGE, now) for key in due]
+
+    def next_deadline(self) -> float | None:
+        """Earliest future instant at which poll() will close something."""
+        if not self._open:
+            return None
+        return min(ob.opened_at + self.max_age_s for ob in self._open.values())
+
+    def flush(self, now: float = 0.0) -> list[ClosedBatch]:
+        """Close everything (graceful drain)."""
+        return [self._close(key, CLOSE_DRAIN, now) for key in list(self._open)]
+
+    def _close(self, key: tuple, reason: str, now: float) -> ClosedBatch:
+        ob = self._open.pop(key)
+        self._depth -= len(ob.requests)
+        operand = stack_rows(ob.requests, ob.d_bucket,
+                             n_rows=self.n_c if self.pad_rows else None)
+        batch = StackedBatch(workload=ob.workload, d_bucket=ob.d_bucket,
+                             requests=ob.requests, operand=operand)
+        return ClosedBatch(batch=batch, reason=reason,
+                           age_s=max(0.0, now - ob.opened_at))

@@ -1,0 +1,116 @@
+"""Synthetic load generation for the online server.
+
+``attach_payloads`` is the single payload synthesiser shared by the offline
+replay (``launch/serve.py``) and the online client, so the two paths consume
+byte-identical traces — the per-tenant parity test in
+``tests/test_serve_runtime.py`` depends on this.
+
+``LoadGenerator`` replays a trace against a :class:`CryptoServer` on a
+virtual clock derived from arrival timestamps: deterministic, immune to host
+jitter, and able to model hours of traffic in seconds of wall time.  Pass
+``realtime=True`` to pace submissions with actual sleeps instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import workloads as WK
+from repro.core.scheduler.queue import PoissonTrace, TenantRequest
+
+
+def attach_payloads(trace: list[TenantRequest], *, seed: int = 0,
+                    accum: str = "fp32_mantissa",
+                    bn_degree_cap: int = 64) -> list[TenantRequest]:
+    """Draw coefficient payloads for a trace (one rng stream, arrival order).
+
+    BN254 degrees are capped (CPU-budget rows, matching the offline replay)
+    and ingested to ERNS residue form; Dilithium rows stay raw u32.
+    """
+    rng = np.random.default_rng(seed)
+    for r in trace:
+        if r.workload == "dilithium":
+            r.coeffs = np.asarray(rng.integers(
+                0, 8380417, r.degree, dtype=np.uint64), np.uint32)
+        else:
+            eng = WK.make_engine("bn254", 64, accum=accum)
+            r.degree = min(r.degree, bn_degree_cap)
+            vals = np.array([int(x) for x in
+                             rng.integers(0, 2**31, r.degree)], object)
+            r.coeffs = np.asarray(eng.ingest(vals))
+    return trace
+
+
+@dataclasses.dataclass
+class LoadResult:
+    outputs: dict            # tenant_id -> result rows (numpy).  Trace
+                             # tenants are unique per request; if a tenant
+                             # submits several requests, this map keeps the
+                             # last — `handles` carries every per-request
+                             # result.
+    handles: list            # every ResponseHandle, submission order
+    rejected: list           # (request, AdmissionDecision) pairs
+    duration_s: float        # trace horizon (virtual) or wall time (realtime)
+
+    @property
+    def n_served(self) -> int:
+        return len(self.outputs)
+
+
+class LoadGenerator:
+    def __init__(self, trace, *, seed: int = 0, accum: str = "fp32_mantissa",
+                 attach: bool = True):
+        if isinstance(trace, PoissonTrace):
+            trace = trace.generate()
+        self.trace = sorted(trace, key=lambda r: r.arrival_time)
+        if attach and any(r.coeffs is None for r in self.trace):
+            attach_payloads(self.trace, seed=seed, accum=accum)
+
+    @staticmethod
+    def _realtime_advance(server, target: float, t_wall0: float,
+                          t_virtual0: float) -> float:
+        """Wall-clock wait until ``target``, waking for every server age
+        deadline on the way so sparse traces still flush on time (pumping
+        with the *current* clock, not a stale deadline)."""
+        while True:
+            now = time.monotonic() - t_wall0 + t_virtual0
+            deadline = server.next_deadline()
+            wake = target if deadline is None else min(target, deadline)
+            if wake > now:
+                time.sleep(wake - now)
+                now = time.monotonic() - t_wall0 + t_virtual0
+            if deadline is not None and deadline <= now:
+                server.pump(now)
+            if now >= target:
+                return now
+
+    def run(self, server, *, realtime: bool = False) -> LoadResult:
+        """Closed loop: submit in arrival order, pump age triggers between
+        arrivals, drain at end-of-trace, collect per-tenant results."""
+        handles, rejected = [], []
+        t_wall0 = time.monotonic()
+        t_virtual0 = self.trace[0].arrival_time if self.trace else 0.0
+        for req in self.trace:
+            if realtime:
+                now = self._realtime_advance(server, req.arrival_time,
+                                             t_wall0, t_virtual0)
+            else:
+                now = req.arrival_time
+                # fire every age deadline that elapsed before this arrival
+                deadline = server.next_deadline()
+                while deadline is not None and deadline <= now:
+                    server.pump(deadline)
+                    deadline = server.next_deadline()
+            h = server.submit(req, now=now)
+            handles.append(h)
+            if h.rejected:
+                rejected.append((req, h.decision))
+        end = (time.monotonic() - t_wall0 + t_virtual0) if realtime else (
+            self.trace[-1].arrival_time if self.trace else 0.0)
+        server.drain(end)
+        outputs = {h.request.tenant_id: h.result()
+                   for h in handles if h.done() and not h.rejected}
+        return LoadResult(outputs=outputs, handles=handles, rejected=rejected,
+                          duration_s=end - t_virtual0)

@@ -1,0 +1,225 @@
+"""The online serving event loop.
+
+``CryptoServer`` turns the offline measurement pipeline into a server:
+
+    submit(request) ──▶ admission ──▶ continuous batcher ──▶ co-scheduled
+                                                             dispatch
+         ▲                                                       │
+         └──────────────── ResponseHandle.result() ◀─────────────┘
+
+Time is explicit: every entry point takes ``now`` (seconds).  Tests and the
+load generator drive a virtual clock from trace timestamps (deterministic,
+faster than real time); live callers pass ``time.monotonic()``.  Dispatch
+itself is measured in wall time regardless, so service-time telemetry is
+real even under a virtual clock.
+
+Per-tenant results are bit-for-bit identical to the offline
+``serve_crypto`` replay on the same trace: row semantics make each tenant's
+output independent of batch composition, and the batcher reuses the Tier-1
+bucketing, so only the grouping differs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+
+from repro.core import validator as V
+from repro.core.scheduler.coscheduler import SliceCoScheduler
+from repro.core.scheduler.rectangular import packing_metrics
+from repro.serve.admission import AdmissionController, AdmissionDecision
+from repro.serve.batcher import ClosedBatch, ContinuousBatcher
+from repro.serve.telemetry import BatchRecord, Telemetry
+
+PENDING, DONE, REJECTED = "pending", "done", "rejected"
+
+
+class RejectedError(RuntimeError):
+    def __init__(self, decision: AdmissionDecision):
+        super().__init__(f"request rejected: {decision.reason} "
+                         f"(retry after {decision.retry_after_s:.4f}s)")
+        self.decision = decision
+
+
+class ResponseHandle:
+    """Future-style handle returned by ``CryptoServer.submit``."""
+
+    def __init__(self, request, submitted_at: float):
+        self.request = request
+        self.submitted_at = submitted_at
+        self.completed_at: float | None = None
+        self.state = PENDING
+        self._value = None
+        self._decision: AdmissionDecision | None = None
+
+    def done(self) -> bool:
+        return self.state != PENDING
+
+    @property
+    def rejected(self) -> bool:
+        return self.state == REJECTED
+
+    @property
+    def decision(self) -> AdmissionDecision | None:
+        return self._decision
+
+    def result(self):
+        if self.state == REJECTED:
+            raise RejectedError(self._decision)
+        if self.state == PENDING:
+            raise RuntimeError("result() before dispatch — call "
+                               "server.pump(now)/drain() first")
+        return self._value
+
+    @property
+    def latency_s(self) -> float | None:
+        if self.completed_at is None:
+            return None
+        return self.completed_at - self.submitted_at
+
+    def _resolve(self, value, completed_at: float):
+        self._value = value
+        self.completed_at = completed_at
+        self.state = DONE
+
+    def _reject(self, decision: AdmissionDecision, at: float):
+        self._decision = decision
+        self.completed_at = at
+        self.state = REJECTED
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    # batching
+    n_c: int = 8
+    bucket_granularity: int | None = None   # None → power-of-two buckets
+    max_age_s: float = 0.01
+    occupancy_close: float | None = None
+    pad_rows: bool = True
+    # admission
+    max_pending: int = 1024
+    tenant_rate_hz: float | None = None
+    tenant_burst: float = 8.0
+    slo_deadline_s: float | None = None
+    # dispatch
+    accum: str = "fp32_mantissa"
+    validate: bool = True
+    n_c_max: int = 128          # M-dimension occupancy denominator (paper)
+
+
+class CryptoServer:
+    def __init__(self, config: ServeConfig | None = None, *,
+                 coscheduler: SliceCoScheduler | None = None,
+                 telemetry: Telemetry | None = None):
+        self.config = cfg = config or ServeConfig()
+        self.batcher = ContinuousBatcher(
+            n_c=cfg.n_c, bucket_granularity=cfg.bucket_granularity,
+            max_age_s=cfg.max_age_s, occupancy_close=cfg.occupancy_close,
+            pad_rows=cfg.pad_rows)
+        self.admission = AdmissionController(
+            max_pending=cfg.max_pending, tenant_rate_hz=cfg.tenant_rate_hz,
+            tenant_burst=cfg.tenant_burst, slo_deadline_s=cfg.slo_deadline_s)
+        self.cos = coscheduler or SliceCoScheduler(accum=cfg.accum)
+        self.telemetry = telemetry or Telemetry()
+        # Pending handles keyed by request identity: O(1) resolve, pruned on
+        # completion (a long-lived server must not accumulate history), and
+        # correct when one tenant has several rows in flight.
+        self._handles: dict[int, ResponseHandle] = {}
+        self._validated: set[tuple] = set()
+        self._draining = False
+
+    # --- ingress --------------------------------------------------------------
+
+    def submit(self, req, now: float | None = None) -> ResponseHandle:
+        now = time.monotonic() if now is None else now
+        handle = ResponseHandle(req, submitted_at=now)
+        if self._draining:
+            decision = AdmissionDecision(False, "draining")
+        elif id(req) in self._handles:
+            decision = AdmissionDecision(False, "duplicate")
+        else:
+            decision = self.admission.admit(req, now, pending=self.batcher.depth)
+        self.telemetry.record_admission(decision.reason)
+        if not decision.admitted:
+            handle._reject(decision, at=now)
+            return handle
+        self._handles[id(req)] = handle
+        self._dispatch(self.batcher.add(req, now), now)
+        return handle
+
+    @property
+    def under_backpressure(self) -> bool:
+        """Soft signal for clients to slow down before rejections start."""
+        return self.admission.backpressure(self.batcher.depth)
+
+    # --- clock-driven flushing ------------------------------------------------
+
+    def pump(self, now: float | None = None) -> int:
+        """Close and dispatch every age-expired batch; returns batches flushed."""
+        now = time.monotonic() if now is None else now
+        closed = self.batcher.poll(now)
+        self._dispatch(closed, now)
+        return len(closed)
+
+    def next_deadline(self) -> float | None:
+        """When pump() next has work — live loops sleep until this instant."""
+        return self.batcher.next_deadline()
+
+    def drain(self, now: float | None = None) -> int:
+        """Graceful shutdown: stop admitting, flush everything in flight."""
+        now = time.monotonic() if now is None else now
+        self._draining = True
+        closed = self.batcher.flush(now)
+        self._dispatch(closed, now)
+        return len(closed)
+
+    # --- dispatch -------------------------------------------------------------
+
+    def _validate_once(self, batch):
+        key = (batch.workload, batch.d_bucket)
+        if key in self._validated:
+            return
+        eng = self.cos.engine_for(batch.workload, batch.d_bucket)
+        rep = V.validate_fn(eng.e2e,
+                            jnp.zeros(batch.operand.shape, jnp.uint32),
+                            expected_passes=eng.n_passes)
+        rep.raise_if_failed()
+        self._validated.add(key)
+
+    def _dispatch(self, closed: list[ClosedBatch], now: float):
+        if not closed:
+            return
+        if self.config.validate:
+            for cb in closed:
+                self._validate_once(cb.batch)
+        t0 = time.perf_counter()
+        results = self.cos.dispatch_mixed([cb.batch for cb in closed])
+        service_s = time.perf_counter() - t0
+        # Attribute wall time to batches by live-row share (one synchronised
+        # launch group; per-batch device timing is not observable from here).
+        total_rows = sum(cb.batch.n_c for cb in closed) or 1
+        self.admission.observe_service(total_rows, service_s)
+        for cb, res in zip(closed, results):
+            batch = cb.batch
+            share = service_s * batch.n_c / total_rows
+            eng = self.cos.engine_for(batch.workload, batch.d_bucket)
+            d_max = (eng.plan.d_max if hasattr(eng, "plan")
+                     else eng.plans[0].d_max)
+            m = packing_metrics(batch.degrees, batch.d_bucket, d_max,
+                                n_c_max=self.config.n_c_max)
+            self.telemetry.record_batch(BatchRecord(
+                workload=batch.workload, d_bucket=batch.d_bucket,
+                n_c=batch.n_c, close_reason=cb.reason,
+                m_occupancy=m.m_occupancy, k_occupancy=m.k_occupancy,
+                queue_depth=self.batcher.depth, service_s=share,
+                age_s=cb.age_s))
+            completed = now + share
+            for i, r in enumerate(batch.requests):
+                handle = self._handles.pop(id(r), None)
+                if handle is None:       # direct batcher use, no submit()
+                    continue
+                # route by row position — a tenant may own several rows
+                handle._resolve(res.rows[i], completed)
+                self.telemetry.observe_latency(
+                    handle.latency_s, queue_wait_s=now - handle.submitted_at)

@@ -1,0 +1,142 @@
+"""Serving telemetry: occupancy, queue depth, and latency distributions.
+
+Every closed batch contributes one :class:`BatchRecord` carrying the Tier-1
+packing metrics (K/M systolic occupancy — the paper's Table-5 quantities) at
+the moment of dispatch, plus the queue depth it left behind and its measured
+service time.  Per-request latencies feed a histogram reporting p50/p95/p99.
+Snapshots are plain dicts, exportable to JSON for ``BENCH_*`` tracking.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+
+class LatencyHistogram:
+    """Exact-sample latency reservoir with interpolated percentiles.
+
+    Serving runs here are bounded (seconds of trace, thousands of requests),
+    so exact samples beat bucketed approximations; swap in a log-bucketed
+    sketch if traces ever outgrow memory.
+    """
+
+    def __init__(self):
+        self._samples: list[float] = []
+        self._sorted = True
+
+    def observe(self, seconds: float):
+        self._samples.append(float(seconds))
+        self._sorted = False
+
+    def __len__(self) -> int:
+        return len(self._samples)
+
+    def percentile(self, q: float) -> float:
+        """Linear-interpolated quantile, q in [0, 100]."""
+        if not self._samples:
+            return 0.0
+        if not self._sorted:
+            self._samples.sort()
+            self._sorted = True
+        s = self._samples
+        pos = (q / 100.0) * (len(s) - 1)
+        lo = int(pos)
+        hi = min(lo + 1, len(s) - 1)
+        frac = pos - lo
+        return s[lo] * (1 - frac) + s[hi] * frac
+
+    def summary(self) -> dict:
+        n = len(self._samples)
+        return {
+            "count": n,
+            "mean_s": (sum(self._samples) / n) if n else 0.0,
+            "p50_s": self.percentile(50),
+            "p95_s": self.percentile(95),
+            "p99_s": self.percentile(99),
+            "max_s": self.percentile(100),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchRecord:
+    workload: str
+    d_bucket: int
+    n_c: int                 # live tenant rows (excludes shape-padding rows)
+    close_reason: str        # "full" | "age" | "occupancy" | "drain"
+    m_occupancy: float
+    k_occupancy: float
+    queue_depth: int         # pending requests left behind at dispatch
+    service_s: float
+    age_s: float             # oldest-request residency when the batch closed
+
+
+class Telemetry:
+    """Accumulates serving events; ``snapshot()`` is the export surface."""
+
+    def __init__(self):
+        self.batches: list[BatchRecord] = []
+        self.latency = LatencyHistogram()
+        self.queue_wait = LatencyHistogram()
+        self.admission_counts: dict[str, int] = {}
+        self._queue_depth_sum = 0
+        self._queue_depth_max = 0
+
+    # --- event sinks ----------------------------------------------------------
+
+    def record_batch(self, rec: BatchRecord):
+        self.batches.append(rec)
+        self._queue_depth_sum += rec.queue_depth
+        self._queue_depth_max = max(self._queue_depth_max, rec.queue_depth)
+
+    def record_admission(self, reason: str):
+        self.admission_counts[reason] = self.admission_counts.get(reason, 0) + 1
+
+    def observe_latency(self, seconds: float, *, queue_wait_s: float = None):
+        self.latency.observe(seconds)
+        if queue_wait_s is not None:
+            self.queue_wait.observe(queue_wait_s)
+
+    # --- export ---------------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        n_b = len(self.batches)
+        per_workload: dict[str, dict] = {}
+        for rec in self.batches:
+            w = per_workload.setdefault(rec.workload, {
+                "batches": 0, "requests": 0, "k_occupancy_sum": 0.0,
+                "m_occupancy_sum": 0.0})
+            w["batches"] += 1
+            w["requests"] += rec.n_c
+            w["k_occupancy_sum"] += rec.k_occupancy
+            w["m_occupancy_sum"] += rec.m_occupancy
+        for w in per_workload.values():
+            w["k_occupancy_mean"] = w.pop("k_occupancy_sum") / w["batches"]
+            w["m_occupancy_mean"] = w.pop("m_occupancy_sum") / w["batches"]
+        reasons: dict[str, int] = {}
+        for rec in self.batches:
+            reasons[rec.close_reason] = reasons.get(rec.close_reason, 0) + 1
+        admitted = self.admission_counts.get("ok", 0)
+        rejected = sum(v for k, v in self.admission_counts.items() if k != "ok")
+        return {
+            "batches": n_b,
+            "requests_served": sum(r.n_c for r in self.batches),
+            "k_occupancy_mean": (sum(r.k_occupancy for r in self.batches) / n_b)
+                                if n_b else 0.0,
+            "m_occupancy_mean": (sum(r.m_occupancy for r in self.batches) / n_b)
+                                if n_b else 0.0,
+            "queue_depth_mean": (self._queue_depth_sum / n_b) if n_b else 0.0,
+            "queue_depth_max": self._queue_depth_max,
+            "service_s_total": sum(r.service_s for r in self.batches),
+            "close_reasons": reasons,
+            "per_workload": per_workload,
+            "latency": self.latency.summary(),
+            "queue_wait": self.queue_wait.summary(),
+            "admission": {"admitted": admitted, "rejected": rejected,
+                          "by_reason": dict(self.admission_counts)},
+        }
+
+    def write_json(self, path: str) -> dict:
+        snap = self.snapshot()
+        with open(path, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True)
+        return snap

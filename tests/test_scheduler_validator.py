@@ -102,6 +102,59 @@ def test_coscheduler_dispatch_dilithium():
         np.testing.assert_array_equal(res.outputs[r.tenant_id], want)
 
 
+def test_coscheduler_compiles_once_per_class():
+    """Repeated dispatches of one (workload, d_bucket, shape) class must hit
+    the cached executable — the trace counter increments only on retrace."""
+    cos = SliceCoScheduler()
+    sched = RectangularScheduler(n_c=2, bucket_granularity=64)
+    for round_i in range(3):                  # fresh batch objects each round
+        reqs = [_dil_request(10 * round_i + i, 64) for i in range(2)]
+        cos.dispatch(sched.plan_batches(reqs)[0])
+    assert cos.trace_counts[("dilithium", 64)] == 1
+    # a different operand shape is a legitimate retrace
+    one = sched.plan_batches([_dil_request(99, 64)])[0]
+    cos.dispatch(one)
+    assert cos.trace_counts[("dilithium", 64)] == 2
+
+
+def test_dispatch_mixed_order_and_nonblocking(monkeypatch):
+    """dispatch_mixed preserves input batch order and launches every program
+    before materialising any result (no host sync between launches)."""
+    rng = np.random.default_rng(17)
+    cos = SliceCoScheduler()
+    dil = [_dil_request(i, 256) for i in range(2)]
+    eng_b = cos.engine_for("bn254", 64)
+    coeffs = np.array([int.from_bytes(rng.bytes(16), "little")
+                       for _ in range(64)], object)
+    bn = [TenantRequest(200, "bn254", 64, 0.0, np.asarray(eng_b.ingest(coeffs)))]
+    sched = RectangularScheduler(n_c=2, bucket_granularity=64)
+    batches = sched.plan_batches(dil + bn)
+    assert len(batches) == 2
+
+    events = []
+    orig_launch = SliceCoScheduler._launch
+    orig_mat = SliceCoScheduler._materialise
+    monkeypatch.setattr(SliceCoScheduler, "_launch",
+                        lambda self, b: (events.append("launch"),
+                                         orig_launch(self, b))[1])
+    monkeypatch.setattr(SliceCoScheduler, "_materialise",
+                        lambda self, *f: (events.append("materialise"),
+                                          orig_mat(self, *f))[1])
+    results = cos.dispatch_mixed(batches)
+    assert events == ["launch", "launch", "materialise", "materialise"]
+    assert [r.batch is b for r, b in zip(results, batches)] == [True, True]
+    # and the rows are still correct end-to-end
+    for r, b in zip(results, batches):
+        if b.workload != "dilithium":
+            continue
+        eng = cos.engine_for("dilithium", b.d_bucket)
+        for req in b.requests:
+            iso = np.zeros((1, b.d_bucket), np.uint32)
+            iso[0, : req.degree] = req.coeffs
+            np.testing.assert_array_equal(r.outputs[req.tenant_id],
+                                          eng.oracle_np(iso)[0])
+
+
 def test_coscheduler_mixed_dispatch():
     rng = np.random.default_rng(9)
     cos = SliceCoScheduler()

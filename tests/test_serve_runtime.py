@@ -1,0 +1,254 @@
+"""Online serving runtime: submit/flush/drain, admission, telemetry, parity."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import field as F
+from repro.core import workloads as WK
+from repro.core.scheduler import TenantRequest
+from repro.core.scheduler.coscheduler import SliceCoScheduler
+from repro.launch.serve import serve_crypto, serve_crypto_online
+from repro.serve import (CryptoServer, LoadGenerator, RejectedError,
+                         ServeConfig)
+from repro.serve.admission import TokenBucket
+from repro.serve.telemetry import LatencyHistogram
+
+RNG = np.random.default_rng(3)
+
+# One co-scheduler for the whole module: its per-(workload, d_bucket) compiled
+# programs are exactly what the serving layer is built to reuse, and sharing
+# them keeps this suite from recompiling the 9-channel BN254 e2e per test.
+COS = SliceCoScheduler()
+
+
+def _cfg(**kw):
+    kw.setdefault("validate", False)
+    kw.setdefault("n_c", 4)
+    kw.setdefault("max_age_s", 0.01)
+    return ServeConfig(**kw)
+
+
+def _server(**kw):
+    return CryptoServer(_cfg(**kw), coscheduler=COS)
+
+
+def _dil_request(tid, d, t=0.0):
+    coeffs = np.asarray(RNG.integers(0, F.DILITHIUM_Q, d, dtype=np.uint64),
+                        np.uint32)
+    return TenantRequest(tid, "dilithium", d, t, coeffs)
+
+
+# --- submit / flush / drain ----------------------------------------------------
+
+def test_submit_age_flush_drain():
+    server = _server()
+    h1 = server.submit(_dil_request(0, 100, 0.000), now=0.000)
+    h2 = server.submit(_dil_request(1, 80, 0.002), now=0.002)
+    assert not h1.done() and not h2.done()
+    assert server.pump(0.005) == 0           # age trigger not reached
+    assert server.pump(0.010) == 1           # 10ms after first row → flush
+    assert h1.done() and h2.done()
+    eng = WK.DilithiumEngine(128)            # pow2 bucket of 100
+    for h, d in ((h1, 100), (h2, 80)):
+        iso = np.zeros((1, 128), np.uint32)
+        iso[0, :d] = h.request.coeffs
+        np.testing.assert_array_equal(h.result(), eng.oracle_np(iso)[0])
+    assert h1.latency_s >= 0.010             # queued the full age window
+    # drain resolves stragglers and stops admission
+    h3 = server.submit(_dil_request(2, 64, 0.02), now=0.02)
+    assert server.drain(0.021) == 1 and h3.done()
+    h4 = server.submit(_dil_request(3, 64, 0.03), now=0.03)
+    assert h4.rejected and h4.decision.reason == "draining"
+
+
+def test_close_on_full():
+    server = _server(n_c=2)
+    h1 = server.submit(_dil_request(0, 64), now=0.0)
+    assert not h1.done()
+    h2 = server.submit(_dil_request(1, 64), now=0.0)
+    assert h1.done() and h2.done()           # N_c rows → closed on add
+    assert server.telemetry.batches[0].close_reason == "full"
+
+
+def test_close_on_occupancy():
+    server = _server(n_c=8, occupancy_close=0.5)
+    handles = [server.submit(_dil_request(i, 256), now=0.0) for i in range(4)]
+    # 4 × 256 / (8 × 256) = 0.5 ⇒ the 4th add crosses the threshold
+    assert all(h.done() for h in handles)
+    assert server.telemetry.batches[0].close_reason == "occupancy"
+    assert server.telemetry.batches[0].n_c == 4
+
+
+def test_next_deadline_tracks_oldest_row():
+    server = _server(max_age_s=0.01)
+    assert server.next_deadline() is None
+    server.submit(_dil_request(0, 64), now=0.004)
+    assert server.next_deadline() == pytest.approx(0.014)
+
+
+def test_same_tenant_multiple_rows_in_one_batch():
+    """A tenant with several requests in one stacked batch gets each of its
+    own rows back (routing is by row position, not tenant id)."""
+    server = _server(n_c=2)
+    r1, r2 = _dil_request(7, 64), _dil_request(7, 100)
+    h1 = server.submit(r1, now=0.0)
+    h2 = server.submit(r2, now=0.0)
+    server.drain(0.001)
+    eng64, eng128 = WK.DilithiumEngine(64), WK.DilithiumEngine(128)
+    iso1 = np.zeros((1, 64), np.uint32)
+    iso1[0, :64] = r1.coeffs
+    iso2 = np.zeros((1, 128), np.uint32)
+    iso2[0, :100] = r2.coeffs
+    np.testing.assert_array_equal(h1.result(), eng64.oracle_np(iso1)[0])
+    np.testing.assert_array_equal(h2.result(), eng128.oracle_np(iso2)[0])
+    # same bucket as well: two d=64 rows from one tenant stay distinct
+    r3, r4 = _dil_request(9, 64), _dil_request(9, 64)
+    server2 = _server(n_c=2)
+    h3 = server2.submit(r3, now=0.0)
+    h4 = server2.submit(r4, now=0.0)
+    iso3 = np.zeros((1, 64), np.uint32)
+    iso3[0] = r3.coeffs
+    iso4 = np.zeros((1, 64), np.uint32)
+    iso4[0] = r4.coeffs
+    np.testing.assert_array_equal(h3.result(), eng64.oracle_np(iso3)[0])
+    np.testing.assert_array_equal(h4.result(), eng64.oracle_np(iso4)[0])
+    # resubmitting an in-flight request object is rejected, not double-served
+    server3 = _server(n_c=4)
+    r5 = _dil_request(11, 64)
+    server3.submit(r5, now=0.0)
+    dup = server3.submit(r5, now=0.0)
+    assert dup.rejected and dup.decision.reason == "duplicate"
+
+
+# --- admission control ---------------------------------------------------------
+
+def test_admission_rejects_queue_full():
+    server = _server(n_c=64, max_age_s=10.0, max_pending=4)
+    handles = [server.submit(_dil_request(i, 64), now=0.0) for i in range(6)]
+    ok = [h for h in handles if not h.rejected]
+    bad = [h for h in handles if h.rejected]
+    assert len(ok) == 4 and len(bad) == 2
+    assert all(h.decision.reason == "queue_full" for h in bad)
+    assert all(h.decision.retry_after_s > 0 for h in bad)
+    with pytest.raises(RejectedError):
+        bad[0].result()
+    snap = server.telemetry.snapshot()
+    assert snap["admission"]["rejected"] == 2
+    assert snap["admission"]["by_reason"]["queue_full"] == 2
+    # draining still serves the admitted four
+    server.drain(0.001)
+    assert all(h.done() and not h.rejected for h in ok)
+
+
+def test_admission_rate_limits_noisy_tenant():
+    server = _server(n_c=64, max_age_s=10.0,
+                     tenant_rate_hz=10.0, tenant_burst=1)
+    h1 = server.submit(_dil_request(0, 64, 0.0), now=0.0)
+    h2 = server.submit(_dil_request(0, 64, 0.01), now=0.01)   # 10ms later
+    h3 = server.submit(_dil_request(1, 64, 0.01), now=0.01)   # other tenant
+    assert not h1.rejected
+    assert h2.rejected and h2.decision.reason == "rate_limited"
+    assert not h3.rejected                    # per-tenant isolation
+    # bucket refills at 10 Hz → admitted again 100ms later
+    h4 = server.submit(_dil_request(0, 64, 0.12), now=0.12)
+    assert not h4.rejected
+
+
+def test_admission_slo_gate():
+    server = _server(n_c=64, max_age_s=10.0, slo_deadline_s=0.1)
+    server.admission.service_rate = 10.0      # pretend: 10 ops/s slice
+    h1 = server.submit(_dil_request(0, 64), now=0.0)
+    h2 = server.submit(_dil_request(1, 64), now=0.0)
+    h3 = server.submit(_dil_request(2, 64), now=0.0)
+    assert not h1.rejected and not h2.rejected
+    # pending=2 ⇒ predicted wait 0.2s > 0.1s SLO ⇒ fast-fail
+    assert h3.rejected and h3.decision.reason == "slo_miss"
+
+
+def test_backpressure_signal():
+    server = _server(n_c=64, max_age_s=10.0, max_pending=10)
+    for i in range(7):
+        server.submit(_dil_request(i, 64), now=0.0)
+    assert not server.under_backpressure
+    server.submit(_dil_request(7, 64), now=0.0)
+    assert server.under_backpressure          # 8 ≥ 0.8 × 10
+
+
+def test_token_bucket_refill():
+    tb = TokenBucket(rate_hz=10.0, burst=2.0)
+    assert tb.try_take(0.0) and tb.try_take(0.0)
+    assert not tb.try_take(0.0)
+    assert tb.time_until() == pytest.approx(0.1)
+    assert not tb.try_take(0.05)              # half a token accrued
+    assert tb.try_take(0.11)
+    tb2 = TokenBucket(rate_hz=10.0, burst=2.0)
+    tb2.try_take(0.0)
+    assert tb2.try_take(100.0) and tb2.try_take(100.0)  # refill caps at burst
+    assert not tb2.try_take(100.0)
+
+
+# --- parity with the offline pipeline ------------------------------------------
+
+def test_online_matches_offline_bitforbit():
+    """Same trace through serve_crypto (offline replay) and the online
+    runtime yields identical per-tenant rows — batching policy changes the
+    grouping, never the arithmetic (Property 5.1 carried online)."""
+    kw = dict(duration_s=0.01, rate_hz=1024, seed=5, validate=False,
+              coscheduler=COS)
+    offline_results, n_ops, _ = serve_crypto(**kw)
+    offline = {}
+    for res in offline_results:
+        offline.update(res.outputs)
+    load, snap, _ = serve_crypto_online(max_age_s=0.002, **kw)
+    assert set(load.outputs) == set(offline) and n_ops == len(offline)
+    for tid, row in offline.items():
+        np.testing.assert_array_equal(load.outputs[tid], row)
+    # mixed trace actually exercised both engines
+    assert set(snap["per_workload"]) == {"dilithium", "bn254"}
+
+
+# --- telemetry -----------------------------------------------------------------
+
+def test_latency_histogram_percentiles():
+    h = LatencyHistogram()
+    for v in range(1, 101):
+        h.observe(v / 1000.0)
+    assert h.percentile(50) == pytest.approx(0.0505)
+    assert h.percentile(99) == pytest.approx(0.09901)
+    assert h.percentile(100) == pytest.approx(0.1)
+    s = h.summary()
+    assert s["count"] == 100 and s["p95_s"] > s["p50_s"]
+    assert LatencyHistogram().summary()["p99_s"] == 0.0
+
+
+def test_telemetry_json_roundtrip(tmp_path):
+    out = tmp_path / "telemetry.json"
+    load, snap, _ = serve_crypto_online(
+        duration_s=0.008, rate_hz=1024, seed=2, validate=False,
+        max_age_s=0.002, telemetry_out=str(out), coscheduler=COS)
+    disk = json.loads(out.read_text())
+    assert disk == json.loads(json.dumps(snap))   # snapshot is JSON-faithful
+    for key in ("k_occupancy_mean", "m_occupancy_mean", "queue_depth_mean",
+                "queue_depth_max", "close_reasons", "per_workload"):
+        assert key in disk
+    for q in ("p50_s", "p95_s", "p99_s"):
+        assert disk["latency"][q] >= 0.0
+    assert disk["batches"] > 0
+    assert disk["requests_served"] == load.n_served
+    assert disk["admission"]["admitted"] == len(load.handles)
+
+
+def test_loadgen_pumps_between_arrivals():
+    """Sparse arrivals: every age deadline between two arrivals fires before
+    the next submit, so latency never exceeds max_age + service share."""
+    reqs = [_dil_request(0, 64, 0.000), _dil_request(1, 64, 0.050)]
+    server = _server(n_c=8, max_age_s=0.005)
+    gen = LoadGenerator(reqs, attach=False)
+    load = gen.run(server)
+    assert load.n_served == 2
+    reasons = [b.close_reason for b in server.telemetry.batches]
+    assert reasons == ["age", "drain"]
+    # the first request left the queue at its age deadline (t=0.005), not at
+    # the next arrival (t=0.05) — queue wait is virtual-clock exact
+    assert server.telemetry.queue_wait.percentile(100) == pytest.approx(0.005)

@@ -1,0 +1,77 @@
+"""PoissonTrace synthesis and degree-bucket boundary behaviour."""
+import numpy as np
+
+from repro.core.scheduler import PoissonTrace
+from repro.core.scheduler.rectangular import bucket_degree, bucket_pow2
+
+
+# --- PoissonTrace --------------------------------------------------------------
+
+def test_trace_seed_determinism():
+    a = PoissonTrace(rate_hz=1024, duration_s=0.5, seed=42).generate()
+    b = PoissonTrace(rate_hz=1024, duration_s=0.5, seed=42).generate()
+    assert len(a) == len(b) > 0
+    for ra, rb in zip(a, b):
+        assert (ra.tenant_id, ra.workload, ra.degree, ra.arrival_time) == \
+               (rb.tenant_id, rb.workload, rb.degree, rb.arrival_time)
+    c = PoissonTrace(rate_hz=1024, duration_s=0.5, seed=43).generate()
+    assert [r.degree for r in c] != [r.degree for r in a]
+
+
+def test_trace_arrivals_sorted_within_horizon():
+    trace = PoissonTrace(rate_hz=2048, duration_s=0.25, seed=1).generate()
+    times = [r.arrival_time for r in trace]
+    assert times == sorted(times)
+    assert 0.0 <= times[0] and times[-1] <= 0.25
+    assert all(64 <= r.degree <= 512 for r in trace)
+
+
+def test_trace_mixture_proportions():
+    trace = PoissonTrace(rate_hz=4096, duration_s=1.0, seed=3,
+                         mixture=(("dilithium", 0.8), ("bn254", 0.2))).generate()
+    frac = np.mean([r.workload == "dilithium" for r in trace])
+    assert 0.75 < frac < 0.85
+    # unnormalised weights are normalised, not rejected
+    trace2 = PoissonTrace(rate_hz=1024, duration_s=0.5, seed=3,
+                          mixture=(("dilithium", 3.0), ("bn254", 1.0))).generate()
+    frac2 = np.mean([r.workload == "dilithium" for r in trace2])
+    assert 0.65 < frac2 < 0.85
+
+
+def test_trace_uniform_degree_mode():
+    trace = PoissonTrace(rate_hz=1024, duration_s=0.5, seed=0,
+                         uniform_degree=256).generate()
+    assert trace and all(r.degree == 256 for r in trace)
+
+
+# --- granular buckets (paper Table-5 convention) --------------------------------
+
+def test_bucket_degree_boundaries():
+    assert bucket_degree(1) == 64             # floor bucket
+    assert bucket_degree(63) == 64
+    assert bucket_degree(64) == 64            # exact multiple stays put
+    assert bucket_degree(65) == 128
+    assert bucket_degree(128) == 128
+    assert bucket_degree(192) == 192          # any multiple, not only pow2
+    assert bucket_degree(100_000) == 100_032  # large d: next multiple of 64
+    assert bucket_degree(33, granularity=32) == 64
+    assert bucket_degree(32, granularity=32) == 32
+
+
+# --- power-of-two buckets (execution path) --------------------------------------
+
+def test_bucket_pow2_boundaries():
+    assert bucket_pow2(1) == 64               # floor bucket
+    assert bucket_pow2(64) == 64
+    assert bucket_pow2(65) == 128             # crossing a boundary doubles
+    assert bucket_pow2(4096) == 4096          # exact power stays put
+    assert bucket_pow2(4097) == 8192
+    assert bucket_pow2(1_000_000) == 1 << 20
+    assert bucket_pow2(100, floor=256) == 256
+
+
+def test_pow2_buckets_are_ntt_transform_sizes():
+    # every bucket must divide the 2-adic part of Q−1 for Dilithium (2^13)
+    for d in (1, 64, 100, 500, 512):
+        b = bucket_pow2(d)
+        assert b >= d and (b & (b - 1)) == 0
