@@ -49,4 +49,7 @@ PAPER = {
     "tpu_v5p_dil_ops": 164822.0,
     "tpu_v4_pointwise_ops": 63000.0,
     "tpu_v4_vpu_only_ops": 4400.0,
+    # §7.2.1: projected spatial collapse of eager (strict-isolation) folding
+    # vs the κ-amortised deferred schedule.
+    "kappa_spatial_collapse": 5.19,
 }

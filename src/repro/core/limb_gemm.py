@@ -9,10 +9,15 @@ A field dot product  y_j = Σ_i a_i · W_ij  (mod m)  is staged as:
      d·n_diag) matmul whose K dimension accumulates the multi-limb convolution
      directly (paper's Property 5.1 packing), OR the mathematically identical
      per-plane form (La·Lw separate dots) used for large d and as a reference;
-  3. a VPU fold per staging pass: diagonals → field value mod m
-     (:func:`repro.core.field.fold_diagonals_u32`), with
-     ``jax.lax.optimization_barrier`` between passes (eager / multi-tenant
-     discipline) or a single deferred fold (lazy / single-tenant discipline).
+  3. the VPU reduction: under the **eager** (multi-tenant isolation)
+     discipline, one fold per staging pass with
+     ``jax.lax.optimization_barrier`` between passes; under the **lazy**
+     κ-amortised discipline (paper §7.2.1), unreduced int32 diagonals
+     accumulate across up to κ passes
+     (:class:`repro.core.accumulator.LazyWindowAccumulator` proves the
+     overflow bound at trace time) and fold once per window via
+     :func:`repro.core.montgomery.deferred_fold`.  ``kappa=None`` selects the
+     whole-transform single-window (MORPH-style) mode.
 
 Accumulator models:
 
@@ -35,19 +40,41 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import accumulator as ACC
 from repro.core import field as F
 from repro.core import limbs as L
+# Accumulator-discipline primitives live in repro.core.accumulator; re-exported
+# here because this module is their historical home (G.MAX_PIXEL_PRODUCT etc.).
+from repro.core.accumulator import (AccumModel, MAX_PIXEL_PRODUCT,  # noqa: F401
+                                    accumulator_window)
 
-MAX_PIXEL_PRODUCT = 255 * 128  # u8 × s8 worst case (paper §5.1)
-
-AccumModel = Literal["fp32_mantissa", "int32_native"]
 Reduction = Literal["eager", "lazy"]
+REDUCTIONS = ("eager", "lazy")
 
-_WINDOW = {"fp32_mantissa": 1 << 24, "int32_native": (1 << 31) - 1}
+
+def check_reduction(reduction: str, kappa: int | None = None) -> str:
+    """Validate a reduction-mode string (typos must fail loudly, not silently
+    trace the eager path).  When ``kappa`` is supplied, also reject the
+    eager+κ>1 combination — deferral depth only means something under lazy
+    folding, and recording one that never happened corrupts bench records."""
+    if reduction not in REDUCTIONS:
+        raise ValueError(f"unknown reduction mode {reduction!r}; "
+                         f"expected one of {REDUCTIONS}")
+    if reduction == "eager" and kappa not in (None, 1):
+        raise ValueError("kappa-amortisation requires reduction='lazy' "
+                         f"(got kappa={kappa} with eager folds)")
+    return reduction
 
 
-def accumulator_window(accum: AccumModel) -> int:
-    return _WINDOW[accum]
+def lazy_window_sizes(n_passes: int, d_tile: int, c: int, accum: AccumModel,
+                      kappa: int | None) -> tuple[int, ...]:
+    """κ-window cut of a staged transform, overflow-checked for ``accum``.
+
+    c = densest convolution diagonal multiplicity (min of the limb counts);
+    raises ValueError when the requested deferral depth exceeds
+    κ_max(accum, d_tile, c) — the trace-time assert of the lazy discipline.
+    """
+    return ACC.window_plan(n_passes, kappa, ACC.kappa_max(accum, d_tile, c))
 
 
 def staging_d_max(data_limbs: int, tw_limbs: int, accum: AccumModel) -> int:
@@ -174,36 +201,52 @@ def staged_transform(
     plan: ChannelPlan,
     *,
     reduction: Reduction = "eager",
+    kappa: int | None = None,
     barriers: bool = True,
     kernel_fn=None,
+    fold_fn=None,
     d_max: int | None = None,
 ):
     """Full staged matrix transform of one channel.
 
     a_u32: (N, d) uint32 coefficients (values < modulus).
-    Returns ((N, d) uint32 result, stats dict with fold/pass counts).
+    Returns ((N, d) uint32 result, stats dict with fold/pass/window counts).
 
     eager: fold + optimization_barrier after every staging pass (the
-      multi-tenant isolation discipline — Invariant 5.1).
-    lazy: accumulate int32 diagonals across passes while the accumulator
-      window allows, folding once (single-tenant MORPH-style discipline).
+      multi-tenant isolation discipline — Invariant 5.1); ``kappa`` must be
+      None or 1.
+    lazy: accumulate unreduced int32 diagonals across up to κ passes per
+      window and fold once per window (paper §7.2.1 amortisation).
+      ``kappa=None`` means one window for the whole transform (MORPH-style);
+      either way the deferral depth is checked against the analytic
+      κ_max(accum, d_tile, c) at trace time and overflowing windows raise.
+    ``fold_fn(acc, m) -> uint32`` swaps the deferred-fold implementation
+    (e.g. :func:`repro.kernels.mont_fold.ops.mont_fold` in kernel mode).
     """
+    check_reduction(reduction, kappa)
+    step = min(d_max or plan.d_max, plan.d)
+    if step > plan.d_max:
+        # Property 5.1: one staging pass must itself fit the accumulator
+        # window — an oversized tile silently rounds under fp32, so refuse
+        # it on every path (the lazy path would also catch it via κ_max=0).
+        raise ValueError(
+            f"staging tile d_tile={step} exceeds the {plan.accum} per-pass "
+            f"ceiling d_max={plan.d_max}")
     m = jnp.uint32(plan.modulus)
     n = a_u32.shape[0]
     tiles = plan.tile_bounds(d_max)
-    stats = {"n_passes": len(tiles), "n_folds": 0}
+    stats = {"n_passes": len(tiles), "n_folds": 0, "reduction": reduction,
+             "kappa": 1, "n_windows": len(tiles)}
 
+    acc = None
     if reduction == "lazy":
         c = min(plan.data_limbs, plan.tw_limbs)
-        if plan.d * c * MAX_PIXEL_PRODUCT > accumulator_window("int32_native"):
-            raise ValueError("lazy reduction would overflow even int32 window")
-        if plan.accum == "fp32_mantissa" and plan.d > plan.d_max:
-            raise ValueError(
-                "lazy reduction across passes violates the fp32 mantissa "
-                "window (Property 5.1) — the paper's point"
-            )
+        windows = lazy_window_sizes(len(tiles), step, c, plan.accum, kappa)
+        stats["kappa"] = windows[0]
+        stats["n_windows"] = len(windows)
+        acc = ACC.LazyWindowAccumulator(plan.modulus, plan.accum, c,
+                                        kappa=windows[0], fold_fn=fold_fn)
 
-    acc_diag = None
     y = jnp.zeros((n, plan.d), jnp.uint32)
     for t, (lo, hi) in enumerate(tiles):
         with jax.named_scope(f"staging_pass_{t}"):
@@ -230,11 +273,14 @@ def staged_transform(
                 # the barrier forbids XLA from coalescing adjacent passes.
                 y, a_u32 = jax.lax.optimization_barrier((y, a_u32))
         else:
-            acc_diag = diag if acc_diag is None else acc_diag + diag
-    if reduction == "lazy":
-        with jax.named_scope("vpu_fold_lazy"):
-            y = F.fold_diagonals_u32(acc_diag, m)
-        stats["n_folds"] += 1
+            acc.add(diag, hi - lo)
+            if acc.ready() or t + 1 == len(tiles):
+                y = F.addmod_u32(y, acc.fold(), m)
+                stats["n_folds"] += 1
+                if barriers and t + 1 < len(tiles):
+                    # window-granular Invariant 5.1: passes inside a window
+                    # may coalesce (that is the amortisation), windows not.
+                    y, a_u32 = jax.lax.optimization_barrier((y, a_u32))
     return y, stats
 
 
@@ -246,6 +292,7 @@ def staged_transform_traced(
     data_limbs: int,
     accum: AccumModel = "fp32_mantissa",
     reduction: Reduction = "eager",
+    kappa: int | None = None,
     barriers: bool = True,
     d_max: int | None = None,
 ):
@@ -255,23 +302,30 @@ def staged_transform_traced(
     a baked constant, so (a) huge-degree dry-runs lower with
     ShapeDtypeStructs and zero host memory, and (b) the twiddle tensor can be
     sharded over the mesh (output-column TP).  Per-plane mode only.
-    Semantics identical to :func:`staged_transform`.
+    Semantics identical to :func:`staged_transform` (including κ windows).
     """
+    check_reduction(reduction, kappa)
     m = jnp.uint32(modulus)
     n, d = a_u32.shape
     tw_limbs = w_planes.shape[-1]
     n_diag = data_limbs + tw_limbs - 1
-    step = d_max or staging_d_max(data_limbs, tw_limbs, accum)
+    ceiling = staging_d_max(data_limbs, tw_limbs, accum)
+    step = d_max or ceiling
+    if min(step, d) > ceiling:
+        raise ValueError(f"staging tile d_tile={min(step, d)} exceeds the "
+                         f"{accum} per-pass ceiling d_max={ceiling}")
     tiles = []
     lo = 0
     while lo < d:
         tiles.append((lo, min(lo + step, d)))
         lo = tiles[-1][1]
 
-    if reduction == "lazy" and accum == "fp32_mantissa" and d > step:
-        raise ValueError("lazy reduction violates the fp32 mantissa window")
+    acc = None
+    if reduction == "lazy":
+        c = min(data_limbs, tw_limbs)
+        windows = lazy_window_sizes(len(tiles), min(step, d), c, accum, kappa)
+        acc = ACC.LazyWindowAccumulator(modulus, accum, c, kappa=windows[0])
 
-    acc_diag = None
     y = jnp.zeros((n, d), jnp.uint32)
     for t, (lo, hi) in enumerate(tiles):
         with jax.named_scope(f"staging_pass_{t}"):
@@ -297,10 +351,11 @@ def staged_transform_traced(
             if barriers and t + 1 < len(tiles):
                 y, a_u32 = jax.lax.optimization_barrier((y, a_u32))
         else:
-            acc_diag = diag if acc_diag is None else acc_diag + diag
-    if reduction == "lazy":
-        with jax.named_scope("vpu_fold_lazy"):
-            y = F.fold_diagonals_u32(acc_diag, m)
+            acc.add(diag, hi - lo)
+            if acc.ready() or t + 1 == len(tiles):
+                y = F.addmod_u32(y, acc.fold(), m)
+                if barriers and t + 1 < len(tiles):
+                    y, a_u32 = jax.lax.optimization_barrier((y, a_u32))
     return y
 
 
@@ -313,8 +368,9 @@ def staged_transform_scan(
     accum: AccumModel = "fp32_mantissa",
     d_max: int | None = None,
     reduction: Reduction = "eager",
+    kappa: int | None = None,
 ):
-    """Eager staged transform with a lax.scan over staging passes.
+    """Staged transform with a lax.scan over staging passes (or κ-windows).
 
     Requires d % tile == 0 (pads otherwise).  The loop-carried dependency
     through the folded accumulator gives a *stronger* serialization guarantee
@@ -322,14 +378,33 @@ def staged_transform_scan(
     stays O(1) in the pass count — at d=8192 this cuts compile time ~50×
     versus the unrolled module.  This is the beyond-paper "scan staging"
     variant measured in EXPERIMENTS.md §Perf.
+
+    Lazy mode scans over κ-windows: each scan step accumulates κ unrolled
+    passes unreduced and folds once, so the fold count is n_passes/κ by
+    dataflow.  Being a loop, every window shares one trace — the validator's
+    per-window census applies to the unrolled :func:`staged_transform` form.
     """
+    check_reduction(reduction, kappa)
     m = jnp.uint32(modulus)
     n, d = a_u32.shape
     tw_limbs = w_planes.shape[-1]
     n_diag = data_limbs + tw_limbs - 1
-    step = d_max or staging_d_max(data_limbs, tw_limbs, accum)
-    step = min(step, d)
-    pad = (-d) % step
+    ceiling = staging_d_max(data_limbs, tw_limbs, accum)
+    step = min(d_max or ceiling, d)
+    if step > ceiling:
+        raise ValueError(f"staging tile d_tile={step} exceeds the {accum} "
+                         f"per-pass ceiling d_max={ceiling}")
+
+    k_eff = 1
+    if reduction == "lazy":
+        c = min(data_limbs, tw_limbs)
+        n_tiles_raw = math.ceil(d / step)
+        windows = lazy_window_sizes(n_tiles_raw, step, c, accum, kappa)
+        k_eff = windows[0]
+
+    # Pad so the pass axis cuts evenly into windows of k_eff tiles; zero
+    # tiles contribute zero diagonals and fold harmlessly.
+    pad = (-d) % (step * k_eff)
     if pad:
         a_u32 = jnp.pad(a_u32, ((0, 0), (0, pad)))
         w_planes = jnp.pad(w_planes, ((0, pad), (0, 0), (0, 0)))
@@ -337,15 +412,7 @@ def staged_transform_scan(
     a_tiles = a_u32.reshape(n, n_tiles, step).transpose(1, 0, 2)
     w_tiles = w_planes.reshape(n_tiles, step, d, tw_limbs)
 
-    if reduction == "lazy":
-        c = min(data_limbs, tw_limbs)
-        if accum == "fp32_mantissa" and d > step:
-            raise ValueError("lazy reduction violates the fp32 mantissa window")
-        if d * c * MAX_PIXEL_PRODUCT > accumulator_window("int32_native"):
-            raise ValueError("lazy reduction would overflow the int32 window")
-
-    def body(carry, inp):
-        a_t, w_t = inp
+    def diagonals(a_t, w_t):
         limbs = L.decompose_u8(a_t, data_limbs)
         parts = []
         for k in range(n_diag):
@@ -358,16 +425,32 @@ def staged_transform_scan(
         diag = jnp.stack(parts, axis=-1)
         if accum == "fp32_mantissa":
             diag = diag.astype(jnp.int32)
-        if reduction == "lazy":
-            return carry + diag, None
-        y = F.addmod_u32(carry, F.fold_diagonals_u32(diag, m), m)
-        return y, None
+        return diag
 
     if reduction == "lazy":
-        acc0 = jnp.zeros((n, d, n_diag), jnp.int32)
-        acc, _ = jax.lax.scan(body, acc0, (a_tiles, w_tiles))
-        with jax.named_scope("vpu_fold_lazy"):
-            return F.fold_diagonals_u32(acc, m)
+        n_windows = n_tiles // k_eff
+        aw = a_tiles.reshape(n_windows, k_eff, n, step)
+        ww = w_tiles.reshape(n_windows, k_eff, step, d, tw_limbs)
+
+        def window_body(y, inp):
+            a_w, w_w = inp
+            acc = None
+            for j in range(k_eff):      # unreduced κ-deep accumulation
+                diag = diagonals(a_w[j], w_w[j])
+                acc = diag if acc is None else acc + diag
+            with jax.named_scope("vpu_fold_lazy"):
+                y = F.addmod_u32(y, F.fold_diagonals_u32(acc, m), m)
+            return y, None
+
+        y0 = jnp.zeros((n, d), jnp.uint32)
+        y, _ = jax.lax.scan(window_body, y0, (aw, ww))
+        return y
+
+    def body(carry, inp):
+        a_t, w_t = inp
+        y = F.addmod_u32(carry, F.fold_diagonals_u32(diagonals(a_t, w_t), m), m)
+        return y, None
+
     y0 = jnp.zeros((n, d), jnp.uint32)
     y, _ = jax.lax.scan(body, y0, (a_tiles, w_tiles))
     return y

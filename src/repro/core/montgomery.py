@@ -1,20 +1,79 @@
-"""Digit-12 Montgomery REDC (the eager "VPU Montgomery reduction" phase).
+"""Montgomery reduction phases: eager digit-12 REDC + the deferred κ-window fold.
 
-CIOS-style REDC over β = 2**12 digits: ``redc_digits(Y)`` returns the
-canonical digit representation of Y·β^{-nred} mod p.  Combined with the
-Montgomery-corrected CRT accumulation in :func:`repro.core.rns.rns_to_field`,
-the β^{nred} factors cancel and the output is exactly X mod p.
+**Eager path** — CIOS-style REDC over β = 2**12 digits: ``redc_digits(Y)``
+returns the canonical digit representation of Y·β^{-nred} mod p.  Combined
+with the Montgomery-corrected CRT accumulation in
+:func:`repro.core.rns.rns_to_field`, the β^{nred} factors cancel and the
+output is exactly X mod p.
 
 Every intermediate stays < 2**25 (digit products < 2**24 + carries), i.e.
 inside the int32 exactness window — the wide-ALU-free discipline the paper
 measures.  This is deliberately a long serial dependency chain of elementwise
 vector ops: the structurally-mandated VPU bottleneck (paper Table 3).
+
+**Deferred path** (paper §7.2.1) — ``deferred_fold`` is the single per-window
+modular reduction of the κ-amortised lazy discipline: the staged transform
+accumulates unreduced limb-convolution diagonals across up to κ staging
+passes (:class:`repro.core.accumulator.LazyWindowAccumulator` proves the
+overflow bound at trace time) and reduces once per window here.  Each fold is
+wrapped in a ``lazy_window_{i}`` scope so the HLO validator can statically
+assert "exactly one fold per window" survived XLA (no re-fusion back to the
+eager per-pass schedule).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import wordarith as W
+
+
+def fold_diagonals_lax(diags, m_u32):
+    """Window-scoped VPU fold built from raw lax primitives.
+
+    Bit-for-bit identical to :func:`repro.core.field.fold_diagonals_u32`
+    (same Horner/conditional-subtract recurrence), but every op is emitted
+    through ``jax.lax`` directly: jnp helpers like ``jnp.mod``/``jnp.where``
+    are internally jitted and jax caches their jaxpr *with the name stack of
+    the first trace*, which would stamp every later window's reduction ops
+    with ``lazy_window_0`` and blind the validator's per-window census (V7).
+    Raw primitives always inherit the live scope.
+    """
+    from jax import lax
+    n_diag = diags.shape[-1]
+    m_i32 = lax.convert_element_type(m_u32, jnp.int32)
+    acc = jnp.zeros(diags.shape[:-1], jnp.uint32)
+    m_b = jnp.broadcast_to(m_u32, acc.shape)
+    for k in range(n_diag - 1, -1, -1):
+        for _ in range(8):                      # (acc << 8) mod m, acc < m
+            acc = lax.shift_left(acc, jnp.broadcast_to(jnp.uint32(1), acc.shape))
+            acc = lax.select(lax.ge(acc, m_b), lax.sub(acc, m_b), acc)
+        d_k = diags[..., k]
+        r = lax.rem(d_k, jnp.broadcast_to(m_i32, d_k.shape))
+        r = lax.select(lax.lt(r, jnp.zeros_like(r)),
+                       lax.add(r, jnp.broadcast_to(m_i32, r.shape)), r)
+        s = lax.add(acc, lax.convert_element_type(r, jnp.uint32))
+        acc = lax.select(lax.ge(s, m_b), lax.sub(s, m_b), s)
+    return acc
+
+
+def deferred_fold(acc_diag, modulus, *, window_index: int, fold_fn=None):
+    """Fold one κ-window of unreduced diagonals to a canonical residue.
+
+    acc_diag: int32 (..., n_diag) — the summed diagonals of every staging pass
+    in window ``window_index`` (bounds proven by the lazy accumulator).
+    ``fold_fn(acc_diag, m_u32) -> uint32`` overrides the reduction
+    implementation (e.g. the Pallas ``mont_fold`` kernel); default is the
+    elementwise VPU Horner fold.
+
+    The window scope is load-bearing: validator check V6/V7 keys on
+    ``lazy_window_{i}/vpu_fold_lazy`` to count fold sites per window.
+    """
+    with jax.named_scope(f"lazy_window_{window_index}"), \
+         jax.named_scope("vpu_fold_lazy"):
+        if fold_fn is not None:
+            return fold_fn(acc_diag, modulus)   # raw (static) modulus
+        return fold_diagonals_lax(acc_diag, jnp.uint32(modulus))
 
 
 def redc_digits(y_digits, chain):

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import limb_gemm as G
 from repro.core import workloads as WK
 from repro.core.scheduler.rectangular import StackedBatch
 
@@ -36,10 +37,20 @@ class DispatchResult:
 
 
 class SliceCoScheduler:
-    """Static workload → device-group assignment over a pod slice."""
+    """Static workload → device-group assignment over a pod slice.
+
+    ``reduction`` sets the default fold discipline; ``reduction_by_workload``
+    overrides it per workload class, so lazy (κ-amortised) tenants can share
+    the slice with strictly-eager tenants — each class keeps its own engines,
+    compiled programs, and device group, so the disciplines never mix inside
+    one program (paper §7.2.1).  Mode strings are validated here: a typo must
+    fail construction, not silently trace the eager path.
+    """
 
     def __init__(self, assignment: dict[str, list] | None = None,
-                 *, accum: str = "fp32_mantissa", reduction: str = "eager"):
+                 *, accum: str = "fp32_mantissa", reduction: str = "eager",
+                 reduction_by_workload: dict[str, str] | None = None,
+                 kappa: int | None = None, d_tile: int | None = None):
         devices = jax.devices()
         if assignment is None:
             # default: split the slice evenly across workload classes
@@ -47,7 +58,15 @@ class SliceCoScheduler:
                           "bn254": devices[max(1, len(devices) // 2):] or devices}
         self.assignment = assignment
         self.accum = accum
-        self.reduction = reduction
+        self.reduction = G.check_reduction(reduction)
+        self.reduction_by_workload = dict(reduction_by_workload or {})
+        for w, mode in self.reduction_by_workload.items():
+            if w not in WK.CLASSES:
+                raise ValueError(f"unknown workload class {w!r} in "
+                                 f"reduction_by_workload")
+            G.check_reduction(mode)
+        self.kappa = kappa
+        self.d_tile = d_tile
         self._meshes = {
             w: Mesh(np.asarray(devs), ("rows",))
             for w, devs in assignment.items()
@@ -59,11 +78,17 @@ class SliceCoScheduler:
         # untouched; one count per distinct operand shape is the healthy state.
         self.trace_counts: dict = {}
 
+    def reduction_for(self, workload: str) -> str:
+        """The fold discipline this slice applies to a workload class."""
+        return self.reduction_by_workload.get(workload, self.reduction)
+
     def engine_for(self, workload: str, d: int):
         key = (workload, d)
         if key not in self._engines:
             self._engines[key] = WK.make_engine(
-                workload, d, accum=self.accum, reduction=self.reduction)
+                workload, d, accum=self.accum,
+                reduction=self.reduction_for(workload), kappa=self.kappa,
+                d_tile=self.d_tile)
         return self._engines[key]
 
     def jitted_for(self, workload: str, d: int):
@@ -109,8 +134,12 @@ class SliceCoScheduler:
     def _materialise(self, batch: StackedBatch, eng, out) -> DispatchResult:
         res = np.asarray(out)
         outputs = {r.tenant_id: res[i] for i, r in enumerate(batch.requests)}
-        return DispatchResult(batch=batch, outputs=outputs,
-                              stats=dict(getattr(eng, "last_stats", {}) or {}),
+        # last_stats is trace-time state (one channel's staged_transform);
+        # fold_profile is the static whole-program census — deterministic per
+        # (workload, d_bucket) and what the serve telemetry aggregates.
+        stats = dict(getattr(eng, "last_stats", {}) or {})
+        stats.update(eng.fold_profile)
+        return DispatchResult(batch=batch, outputs=outputs, stats=stats,
                               rows=res)
 
     def dispatch(self, batch: StackedBatch) -> DispatchResult:

@@ -14,6 +14,15 @@ asserts the separation invariants against the *stock* XLA output:
       ``pzone_*`` scopes (e.g. 3-limb Dilithium with 4-limb BN254 blocks).
   V5 (disjoint addressing): no input/output buffer donation aliases tensors
       across distinct workload zones.
+  V6 (κ-window fold survival, lazy modules): the optimized module carries
+      exactly one ``vpu_fold_lazy`` site per deferral window (scope
+      ``lazy_window_{i}``, qualified by channel for multi-channel engines)
+      and **zero** eager per-pass folds — XLA must not have re-fused the
+      deferred schedule back to the eager one (paper §7.2.1).
+  V7 (single fold per window, lazy modules): in the trace-order-faithful
+      lowered module, each window scope contains exactly one fold's worth of
+      modular-reduction ops (``n_diag`` remainders) — a window that reduces
+      twice is an eager fold hiding under a lazy label.
 
 Any violation raises :class:`ValidationError` (dispatch abort) and carries the
 offending subgraph snippet for triage.  The validator also returns the static
@@ -31,6 +40,10 @@ WZONE_RE = re.compile(r"wzone_[A-Za-z0-9_]+")
 PZONE_RE = re.compile(r"pzone_[A-Za-z0-9_]+")
 PASS_RE = re.compile(r"staging_pass_(\d+)")
 OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+# Window key carries the channel qualifier so BN254's per-channel windows
+# with the same index stay distinct.
+LAZY_WIN_RE = re.compile(r"(?:channel_\d+/)?lazy_window_\d+(?=/vpu_fold_lazy)")
+EAGER_FOLD_RE = re.compile(r"staging_pass_\d+/vpu_fold(?!_lazy)")
 
 
 class ValidationError(AssertionError):
@@ -78,8 +91,51 @@ def _fusion_blocks(hlo_text: str) -> list[str]:
 
 def validate_module(lowered_text: str, compiled_text: str, *,
                     expected_passes: int | None = None,
-                    expect_eager: bool = True) -> ValidationReport:
+                    expect_eager: bool = True,
+                    expected_windows: int | None = None,
+                    n_diag: int | None = None) -> ValidationReport:
     violations = []
+
+    # --- V6/V7: κ-window fold structure of a lazy module ----------------------
+    if expected_windows is not None:
+        win_scopes = set(LAZY_WIN_RE.findall(compiled_text))
+        if len(win_scopes) != expected_windows:
+            violations.append((
+                "V6", f"{len(win_scopes)} deferred-fold windows in the "
+                f"optimized module, expected {expected_windows} "
+                f"(windows seen: {sorted(win_scopes)[:8]})"))
+        eager_folds = set(EAGER_FOLD_RE.findall(compiled_text))
+        if eager_folds:
+            violations.append((
+                "V6", f"lazy module contains eager per-pass folds "
+                f"{sorted(eager_folds)[:4]} — XLA (or the trace) re-fused "
+                f"the deferred schedule back to eager"))
+        if n_diag is not None:
+            # Count the modular-reduction instructions each window scope
+            # carries in the optimized module (op_name metadata survives
+            # fusion).  One fold reduces exactly n_diag diagonals → n_diag
+            # remainder instructions per window; 2·n_diag means a second fold
+            # is hiding under the window's lazy label, 0 means the fold is
+            # missing or not the elementwise form this check audits (kernel
+            # fold_fn programs lower to custom-calls — don't pass n_diag for
+            # those).  Every discovered window scope is checked, so a window
+            # with no remainders at all is flagged, not skipped.
+            per_window: dict[str, int] = {}
+            for ln in compiled_text.splitlines():
+                if not re.search(r"= \S+ remainder\(", ln):
+                    continue
+                mo = OPNAME_RE.search(ln)
+                name = mo.group(1) if mo else ""
+                wm = LAZY_WIN_RE.search(name)
+                if wm:
+                    per_window[wm.group(0)] = per_window.get(wm.group(0), 0) + 1
+            for win in sorted(win_scopes | set(per_window)):
+                count = per_window.get(win, 0)
+                if count != n_diag:
+                    violations.append((
+                        "V7", f"window {win} carries {count} modular-reduction "
+                        f"ops (expected {n_diag} — exactly one fold per "
+                        f"window)"))
 
     # --- V2: barrier survival in the lowered module --------------------------
     n_barriers = len(re.findall(r"optimization_barrier", lowered_text))
@@ -183,8 +239,14 @@ def validate_module(lowered_text: str, compiled_text: str, *,
 
 
 def validate_fn(fn, *args, expected_passes: int | None = None,
-                expect_eager: bool = True, donate_argnums=()) -> ValidationReport:
-    """Lower + compile ``fn`` and run the structural validator on both texts."""
+                expect_eager: bool = True, expected_windows: int | None = None,
+                n_diag: int | None = None,
+                donate_argnums=()) -> ValidationReport:
+    """Lower + compile ``fn`` and run the structural validator on both texts.
+
+    ``expected_windows``/``n_diag`` arm the lazy-mode V6/V7 checks (pass
+    ``expect_eager=False`` alongside — a κ-amortised program intentionally
+    defers folds out of the per-pass schedule V1/V2 police)."""
     lowered = jax.jit(fn, donate_argnums=donate_argnums).lower(*args)
     compiled = lowered.compile()
     try:
@@ -193,7 +255,9 @@ def validate_fn(fn, *args, expected_passes: int | None = None,
         low_txt = lowered.as_text()
     return validate_module(low_txt, compiled.as_text(),
                            expected_passes=expected_passes,
-                           expect_eager=expect_eager)
+                           expect_eager=expect_eager,
+                           expected_windows=expected_windows,
+                           n_diag=n_diag)
 
 
 def fold_census(fn, *args) -> dict:
@@ -206,8 +270,11 @@ def fold_census(fn, *args) -> dict:
                           expect_eager=False)
     txt = compiled.as_text()
     pass_folds = set(re.findall(r"staging_pass_(\d+)/vpu_fold", txt))
-    n_lazy = 1 if "vpu_fold_lazy" in txt else 0
+    lazy_windows = set(LAZY_WIN_RE.findall(txt))
+    # κ-window scopes when present; plain vpu_fold_lazy (scan form) counts 1.
+    n_lazy = len(lazy_windows) or (1 if "vpu_fold_lazy" in txt else 0)
     n_fold_ops = len(re.findall(r"vpu_fold", txt))
     return {"n_dots": rep.n_dots,
             "n_fold_scopes": len(pass_folds) + n_lazy,
+            "n_lazy_windows": len(lazy_windows),
             "n_fold_tagged_ops": n_fold_ops, "n_barriers": rep.n_barriers}

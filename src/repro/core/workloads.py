@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 
 import numpy as np
 import jax
@@ -48,32 +49,75 @@ BN254_FULL = WorkloadClass("bn254_full", precision_zone=4, data_limbs=4,
 CLASSES = {c.name: c for c in (DILITHIUM, BN254, BN254_FULL)}
 
 
+def _fold_profile(plans, reduction: str, kappa: int | None,
+                  d_tile: int | None) -> dict:
+    """Static fold/window census of an engine's compiled program (one entry
+    per channel plan; all channels share a plan shape).  Mirrors the window
+    maths of :func:`repro.core.limb_gemm.staged_transform` exactly — the
+    serve telemetry and HLO validator both consume this."""
+    plan = plans[0]
+    step = min(d_tile or plan.d_max, plan.d)
+    if step > plan.d_max:
+        raise ValueError(
+            f"staging tile d_tile={step} exceeds the {plan.accum} per-pass "
+            f"ceiling d_max={plan.d_max}")
+    n_passes = math.ceil(plan.d / step)
+    if reduction == "eager":
+        windows_per_channel = n_passes
+    else:
+        c = min(plan.data_limbs, plan.tw_limbs)
+        windows_per_channel = len(
+            G.lazy_window_sizes(n_passes, step, c, plan.accum, kappa))
+    return {
+        "reduction": reduction,
+        "kappa": kappa,
+        "n_passes": n_passes,
+        "n_channels": len(plans),
+        "windows_per_channel": windows_per_channel,
+        "n_folds": windows_per_channel * len(plans),
+        "n_diag": plan.n_diag,
+    }
+
+
 class DilithiumEngine:
     """Forward negacyclic NTT over F_Q; exact end-to-end for all inputs."""
 
     wclass = DILITHIUM
 
     def __init__(self, d: int, *, accum: G.AccumModel = "fp32_mantissa",
-                 reduction: G.Reduction = "eager"):
+                 reduction: G.Reduction = "eager", kappa: int | None = None,
+                 d_tile: int | None = None):
         self.d = d
         self.accum = accum
-        self.reduction = reduction
+        self.reduction = G.check_reduction(reduction)
+        self.kappa = kappa
+        # Staging-pass tile override: None → the accumulator-window ceiling
+        # d_max.  A smaller tile (e.g. the fp32-era 171) under int32_native
+        # keeps the paper's pass structure while κ defers the folds.
+        self.d_tile = d_tile
         # FIPS-204 negacyclic convention needs 2d | Q-1 (2-adicity 13 → d ≤
         # 4096); larger edge-polynomial degrees use the cyclic transform.
         self.negacyclic = (F.DILITHIUM_Q - 1) % (2 * d) == 0
         w = NTT.ntt_matrix(d, F.DILITHIUM_Q, negacyclic=self.negacyclic)
         self.plan = G.make_channel_plan(
             w, F.DILITHIUM_Q, data_limbs=3, tw_limbs=3, accum=accum)
+        self.fold_profile = _fold_profile([self.plan], self.reduction, kappa,
+                                          d_tile)
 
     @property
     def n_passes(self) -> int:
-        return self.plan.n_passes
+        return self.fold_profile["n_passes"]
+
+    @property
+    def n_diag(self) -> int:
+        return self.plan.n_diag
 
     def evaluate(self, a_u32, *, kernel_fn=None):
         """(N, d) uint32 -> (N, d) uint32 forward NTT (one op per row)."""
         with jax.named_scope("wzone_dilithium"), jax.named_scope("pzone_3limb"):
             y, self.last_stats = G.staged_transform(
-                a_u32, self.plan, reduction=self.reduction, kernel_fn=kernel_fn)
+                a_u32, self.plan, reduction=self.reduction, kappa=self.kappa,
+                d_max=self.d_tile, kernel_fn=kernel_fn)
         return y
 
     e2e = evaluate  # Dilithium op == the forward transform
@@ -87,12 +131,15 @@ class BN254Engine:
     """ERNS matrix transform + per-coefficient Montgomery reduction."""
 
     def __init__(self, d: int, *, accum: G.AccumModel = "fp32_mantissa",
-                 reduction: G.Reduction = "eager", n_channels: int = 9,
+                 reduction: G.Reduction = "eager", kappa: int | None = None,
+                 d_tile: int | None = None, n_channels: int = 9,
                  p: int = F.BN254_FR, evaluation_matrix: np.ndarray | None = None):
         self.wclass = BN254 if n_channels == 9 else BN254_FULL
         self.d = d
         self.accum = accum
-        self.reduction = reduction
+        self.reduction = G.check_reduction(reduction)
+        self.kappa = kappa
+        self.d_tile = d_tile
         self.chain = R.make_chain(n_channels, p=p)
         # CRT-consistent evaluation operand: residues of one integer matrix Ω.
         if evaluation_matrix is None:
@@ -103,6 +150,8 @@ class BN254Engine:
             w_ch = (evaluation_matrix.astype(object) % m).astype(np.uint32)
             self.plans.append(G.make_channel_plan(
                 w_ch, m, data_limbs=4, tw_limbs=4, accum=accum))
+        self.fold_profile = _fold_profile(self.plans, self.reduction, kappa,
+                                          d_tile)
 
     @property
     def n_channels(self) -> int:
@@ -110,7 +159,11 @@ class BN254Engine:
 
     @property
     def n_passes(self) -> int:
-        return self.plans[0].n_passes
+        return self.fold_profile["n_passes"]
+
+    @property
+    def n_diag(self) -> int:
+        return self.plans[0].n_diag
 
     def ingest(self, coeffs_np: np.ndarray):
         """Host object-int coefficients [..., d] -> (..., d, C) uint32."""
@@ -125,6 +178,7 @@ class BN254Engine:
                 with jax.named_scope(f"channel_{ci}"):
                     y, st = G.staged_transform(
                         a_res[..., ci], plan, reduction=self.reduction,
+                        kappa=self.kappa, d_max=self.d_tile,
                         kernel_fn=kernel_fn)
                 outs.append(y)
                 self.last_stats = st
@@ -152,11 +206,13 @@ class BN254Engine:
 
 @functools.lru_cache(maxsize=32)
 def make_engine(name: str, d: int, accum: str = "fp32_mantissa",
-                reduction: str = "eager"):
+                reduction: str = "eager", kappa: int | None = None,
+                d_tile: int | None = None):
+    kw = dict(accum=accum, reduction=reduction, kappa=kappa, d_tile=d_tile)
     if name == "dilithium":
-        return DilithiumEngine(d, accum=accum, reduction=reduction)
+        return DilithiumEngine(d, **kw)
     if name == "bn254":
-        return BN254Engine(d, accum=accum, reduction=reduction, n_channels=9)
+        return BN254Engine(d, n_channels=9, **kw)
     if name == "bn254_full":
-        return BN254Engine(d, accum=accum, reduction=reduction, n_channels=18)
+        return BN254Engine(d, n_channels=18, **kw)
     raise KeyError(name)

@@ -15,7 +15,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.kernels.limb_matmul.ops import limb_matmul
-from repro.kernels.mont_fold.ops import mont_fold
+from repro.kernels.mont_fold.ops import mont_fold, mont_fold_window_fn
 from repro.kernels.fused_ntt_tile.ops import fused_ntt_tile
 
 

@@ -22,3 +22,20 @@ def mont_fold(diags, modulus: int, *, interpret: bool | None = None):
     out = mont_fold_pallas(x, modulus=modulus, bn=bn, bd=bd,
                            interpret=interpret)
     return out[:n, :d]
+
+
+def mont_fold_window_fn(*, interpret: bool | None = None):
+    """``fold_fn`` adapter for κ-window lazy mode.
+
+    Returned callable has the ``fold_fn(acc_diag, modulus) -> uint32``
+    contract of :func:`repro.core.montgomery.deferred_fold`, so the once-per-
+    window deferred reduction runs through the Pallas VPU kernel instead of
+    the elementwise jnp fold.  Semantics are identical (same Horner/
+    conditional-subtract recurrence); diagonals may be κ-pass sums — the
+    kernel's per-diagonal ``mod`` handles any int32 magnitude.
+    """
+
+    def fold(acc_diag, modulus):
+        return mont_fold(acc_diag, int(modulus), interpret=interpret)
+
+    return fold

@@ -41,7 +41,7 @@ CRYPTO_SHAPES = {
 
 
 def _crypto_cell(arch: str, shape: str, mesh, *, accum="fp32_mantissa",
-                 reduction="eager", scan_staging=False):
+                 reduction="eager", kappa=None, scan_staging=False):
     """Lower the Aegis sequencer op for a pod-slice stacked batch.
 
     Twiddle limb planes enter as *traced operands* (sharded over "model" on
@@ -67,11 +67,11 @@ def _crypto_cell(arch: str, shape: str, mesh, *, accum="fp32_mantissa",
             return G.staged_transform_scan(a, w, modulus=modulus,
                                            data_limbs=4 if name == "bn254"
                                            else 3, accum=accum,
-                                           reduction=reduction)
+                                           reduction=reduction, kappa=kappa)
         return G.staged_transform_traced(a, w, modulus=modulus,
                                          data_limbs=4 if name == "bn254"
                                          else 3, accum=accum,
-                                         reduction=reduction)
+                                         reduction=reduction, kappa=kappa)
 
     if name == "dilithium":
         a_sds = jax.ShapeDtypeStruct((rows, d), jnp.uint32)
@@ -105,7 +105,7 @@ def _crypto_cell(arch: str, shape: str, mesh, *, accum="fp32_mantissa",
                         NamedSharding(mesh, P(None, None, "model", None)))
         lowered = jax.jit(step, in_shardings=in_shardings).lower(a_sds, w_sds)
     return lowered, {"rows": rows, "d": d, "workload": name,
-                     "accum": accum, "reduction": reduction,
+                     "accum": accum, "reduction": reduction, "kappa": kappa,
                      "scan_staging": scan_staging}
 
 
@@ -155,7 +155,7 @@ def _lm_cell(arch: str, shape: str, mesh, rules: ShardingRules,
     return lowered, extra
 
 
-def run_cell(arch: str, shape: str, *, multi_pod: bool,
+def run_cell(arch: str, shape: str, *, multi_pod: bool, kappa=None,
              accum: str = "fp32_mantissa", reduction: str = "eager",
              scan_staging: bool = False, overrides: dict | None = None,
              tag: str = "") -> dict:
@@ -170,7 +170,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool,
     try:
         if arch.startswith("aegis_"):
             lowered, extra = _crypto_cell(arch, shape, mesh, accum=accum,
-                                          reduction=reduction,
+                                          reduction=reduction, kappa=kappa,
                                           scan_staging=scan_staging)
             rules = None
         else:
@@ -224,7 +224,10 @@ def main():
     ap.add_argument("--shape", default="all")
     ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
     ap.add_argument("--accum", default="fp32_mantissa")
-    ap.add_argument("--reduction", default="eager")
+    ap.add_argument("--reduction", default="eager",
+                    choices=["eager", "lazy"])
+    ap.add_argument("--kappa", type=int, default=None,
+                    help="lazy deferral window depth (passes per fold)")
     ap.add_argument("--scan-staging", action="store_true")
     ap.add_argument("--override", action="append", default=[],
                     help="ArchConfig overrides, e.g. gqa_repeat_kv=true")
@@ -252,7 +255,7 @@ def main():
         for shape in shapes:
             for multi in meshes:
                 rec = run_cell(arch, shape, multi_pod=multi, accum=args.accum,
-                               reduction=args.reduction,
+                               reduction=args.reduction, kappa=args.kappa,
                                scan_staging=args.scan_staging,
                                overrides=overrides or None, tag=args.tag)
                 mesh_tag = "multi" if multi else "single"

@@ -70,9 +70,16 @@ def serve_crypto(*, duration_s=0.05, rate_hz=2048, n_c=8, d_uniform=None,
                     eng = cos.engine_for(w, batch.d_bucket)
                     shape = ((batch.n_c, batch.d_bucket) if w == "dilithium"
                              else (batch.n_c, batch.d_bucket, eng.n_channels))
-                    rep = V.validate_fn(
-                        eng.e2e, jnp.zeros(shape, jnp.uint32),
-                        expected_passes=eng.n_passes)
+                    if cos.reduction_for(w) == "eager":
+                        rep = V.validate_fn(
+                            eng.e2e, jnp.zeros(shape, jnp.uint32),
+                            expected_passes=eng.n_passes)
+                    else:
+                        rep = V.validate_fn(
+                            eng.e2e, jnp.zeros(shape, jnp.uint32),
+                            expect_eager=False,
+                            expected_windows=eng.fold_profile["n_folds"],
+                            n_diag=eng.n_diag)
                     rep.raise_if_failed()
                     validated.add((w, batch.d_bucket))
                 results.append(cos.dispatch(batch))
@@ -84,6 +91,8 @@ def serve_crypto(*, duration_s=0.05, rate_hz=2048, n_c=8, d_uniform=None,
 def serve_crypto_online(*, duration_s=0.05, rate_hz=2048, n_c=8,
                         max_age_s=0.005, d_uniform=None, seed=0,
                         validate=True, accum="fp32_mantissa",
+                        reduction="eager", reduction_by_workload=None,
+                        kappa=None, d_tile=None,
                         max_pending=1024, tenant_rate_hz=None,
                         slo_deadline_s=None, occupancy_close=None,
                         telemetry_out=None, realtime=False, coscheduler=None):
@@ -94,6 +103,9 @@ def serve_crypto_online(*, duration_s=0.05, rate_hz=2048, n_c=8,
 
     cfg = ServeConfig(n_c=n_c, max_age_s=max_age_s, validate=validate,
                       accum=accum, max_pending=max_pending,
+                      reduction=reduction,
+                      reduction_by_workload=reduction_by_workload,
+                      kappa=kappa, d_tile=d_tile,
                       tenant_rate_hz=tenant_rate_hz,
                       slo_deadline_s=slo_deadline_s,
                       occupancy_close=occupancy_close)
@@ -128,7 +140,28 @@ def main():
                     help="write the telemetry snapshot JSON here")
     ap.add_argument("--realtime", action="store_true",
                     help="pace submissions in wall time (default: virtual clock)")
+    ap.add_argument("--accum", default="fp32_mantissa",
+                    choices=["fp32_mantissa", "int32_native"])
+    ap.add_argument("--reduction", default="eager", choices=["eager", "lazy"],
+                    help="default fold discipline for every workload class")
+    ap.add_argument("--reduction-by-workload", default=None,
+                    help="per-class overrides, e.g. 'dilithium=lazy,bn254=eager'")
+    ap.add_argument("--kappa", type=int, default=None,
+                    help="lazy deferral window depth (None = whole transform)")
+    ap.add_argument("--d-tile", type=int, default=None,
+                    help="staging-pass tile width override (e.g. 171 keeps the "
+                         "fp32-era pass structure under --accum int32_native)")
     args = ap.parse_args()
+
+    reduction_by_workload = None
+    if args.reduction_by_workload:
+        try:
+            reduction_by_workload = dict(
+                kv.split("=", 1) for kv in args.reduction_by_workload.split(","))
+        except ValueError:
+            ap.error("--reduction-by-workload expects 'class=mode[,class=mode]'"
+                     f", e.g. 'dilithium=lazy' (got "
+                     f"{args.reduction_by_workload!r})")
 
     if args.mode == "lm":
         cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -139,6 +172,9 @@ def main():
             duration_s=args.duration, rate_hz=args.rate, n_c=args.n_c,
             max_age_s=args.max_age_ms / 1e3, tenant_rate_hz=args.tenant_rate,
             slo_deadline_s=None if args.slo_ms is None else args.slo_ms / 1e3,
+            accum=args.accum, reduction=args.reduction,
+            reduction_by_workload=reduction_by_workload,
+            kappa=args.kappa, d_tile=args.d_tile,
             telemetry_out=args.telemetry_out, realtime=args.realtime)
         lat = snap["latency"]
         print(f"online: served {load.n_served}/{len(load.handles)} requests "
@@ -151,6 +187,9 @@ def main():
               f"max={snap['queue_depth_max']}")
         print(f"latency: p50={lat['p50_s']*1e3:.2f}ms "
               f"p95={lat['p95_s']*1e3:.2f}ms p99={lat['p99_s']*1e3:.2f}ms")
+        stalls = snap["reduction_stalls"]
+        print(f"reduction stalls: eager={stalls['eager_folds']} "
+              f"deferred={stalls['deferred_folds']}")
         if args.telemetry_out:
             print(f"telemetry JSON → {args.telemetry_out}")
     else:

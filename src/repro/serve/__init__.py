@@ -9,9 +9,16 @@ Converts the offline measurement pipeline (Poisson replay → Tier-1 stacking
   backpressure signalling;
 * :mod:`batcher`   — continuous rectangular batcher (close on N_c-full, age
   timeout, or occupancy threshold);
-* :mod:`telemetry` — K/M occupancy, queue depth, p50/p95/p99 latency, JSON
-  export for ``BENCH_*`` tracking;
+* :mod:`telemetry` — K/M occupancy, queue depth, p50/p95/p99 latency,
+  eager-vs-deferred reduction-stall counters, JSON export for ``BENCH_*``
+  tracking;
 * :mod:`client`    — synthetic load generator (virtual or real-time pacing).
+
+``ServeConfig.reduction_by_workload`` selects the fold discipline per
+workload class (paper §7.2.1): lazy (κ-amortised deferred Montgomery
+reduction) classes batch and dispatch next to strictly-eager classes, each
+with its own compiled programs and HLO validation mode (eager V1–V5; lazy
+adds the one-fold-per-window checks V6/V7).
 """
 from repro.serve.admission import (AdmissionController, AdmissionDecision,
                                    TokenBucket)

@@ -106,6 +106,16 @@ class ServeConfig:
     accum: str = "fp32_mantissa"
     validate: bool = True
     n_c_max: int = 128          # M-dimension occupancy denominator (paper)
+    # reduction discipline (paper §7.2.1): default mode plus per-workload-
+    # class overrides, e.g. {"dilithium": "lazy"} co-schedules κ-amortised
+    # Dilithium batches next to strictly-eager BN254 batches.  ``kappa``
+    # bounds the deferral window (None → whole transform, checked against
+    # κ_max at trace time); ``d_tile`` overrides the staging-pass width so
+    # the paper's pass structure survives the roomier int32 accumulator.
+    reduction: str = "eager"
+    reduction_by_workload: dict | None = None
+    kappa: int | None = None
+    d_tile: int | None = None
 
 
 class CryptoServer:
@@ -120,7 +130,10 @@ class CryptoServer:
         self.admission = AdmissionController(
             max_pending=cfg.max_pending, tenant_rate_hz=cfg.tenant_rate_hz,
             tenant_burst=cfg.tenant_burst, slo_deadline_s=cfg.slo_deadline_s)
-        self.cos = coscheduler or SliceCoScheduler(accum=cfg.accum)
+        self.cos = coscheduler or SliceCoScheduler(
+            accum=cfg.accum, reduction=cfg.reduction,
+            reduction_by_workload=cfg.reduction_by_workload,
+            kappa=cfg.kappa, d_tile=cfg.d_tile)
         self.telemetry = telemetry or Telemetry()
         # Pending handles keyed by request identity: O(1) resolve, pruned on
         # completion (a long-lived server must not accumulate history), and
@@ -181,9 +194,18 @@ class CryptoServer:
         if key in self._validated:
             return
         eng = self.cos.engine_for(batch.workload, batch.d_bucket)
-        rep = V.validate_fn(eng.e2e,
-                            jnp.zeros(batch.operand.shape, jnp.uint32),
-                            expected_passes=eng.n_passes)
+        if self.cos.reduction_for(batch.workload) == "eager":
+            rep = V.validate_fn(eng.e2e,
+                                jnp.zeros(batch.operand.shape, jnp.uint32),
+                                expected_passes=eng.n_passes)
+        else:
+            # κ-amortised program: per-pass V1/V2 don't apply; instead assert
+            # exactly one deferred fold per window survived XLA (V6/V7).
+            rep = V.validate_fn(eng.e2e,
+                                jnp.zeros(batch.operand.shape, jnp.uint32),
+                                expect_eager=False,
+                                expected_windows=eng.fold_profile["n_folds"],
+                                n_diag=eng.n_diag)
         rep.raise_if_failed()
         self._validated.add(key)
 
@@ -213,7 +235,9 @@ class CryptoServer:
                 n_c=batch.n_c, close_reason=cb.reason,
                 m_occupancy=m.m_occupancy, k_occupancy=m.k_occupancy,
                 queue_depth=self.batcher.depth, service_s=share,
-                age_s=cb.age_s))
+                age_s=cb.age_s,
+                reduction=eng.fold_profile["reduction"],
+                n_folds=eng.fold_profile["n_folds"]))
             completed = now + share
             for i, r in enumerate(batch.requests):
                 handle = self._handles.pop(id(r), None)

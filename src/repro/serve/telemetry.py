@@ -68,6 +68,10 @@ class BatchRecord:
     queue_depth: int         # pending requests left behind at dispatch
     service_s: float
     age_s: float             # oldest-request residency when the batch closed
+    reduction: str = "eager"  # fold discipline of this batch's program
+    n_folds: int = 0         # static VPU-fold (reduction-stall) count of the
+                             # dispatched program: n_passes·C eager,
+                             # ⌈n_passes/κ⌉·C deferred (paper §7.2.1)
 
 
 class Telemetry:
@@ -104,17 +108,30 @@ class Telemetry:
         for rec in self.batches:
             w = per_workload.setdefault(rec.workload, {
                 "batches": 0, "requests": 0, "k_occupancy_sum": 0.0,
-                "m_occupancy_sum": 0.0})
+                "m_occupancy_sum": 0.0, "reduction": rec.reduction,
+                "folds": 0})
             w["batches"] += 1
             w["requests"] += rec.n_c
             w["k_occupancy_sum"] += rec.k_occupancy
             w["m_occupancy_sum"] += rec.m_occupancy
+            w["folds"] += rec.n_folds
         for w in per_workload.values():
             w["k_occupancy_mean"] = w.pop("k_occupancy_sum") / w["batches"]
             w["m_occupancy_mean"] = w.pop("m_occupancy_sum") / w["batches"]
         reasons: dict[str, int] = {}
         for rec in self.batches:
             reasons[rec.close_reason] = reasons.get(rec.close_reason, 0) + 1
+        # Reduction-stall counters: each VPU fold is a reduction stall of the
+        # MXU pipeline; the eager/deferred split per close reason is the κ-
+        # amortisation audit surface (paper §7.2.1).
+        stalls = {"eager_folds": 0, "deferred_folds": 0,
+                  "by_close_reason": {}}
+        for rec in self.batches:
+            kind = "eager_folds" if rec.reduction == "eager" else "deferred_folds"
+            stalls[kind] += rec.n_folds
+            by = stalls["by_close_reason"].setdefault(
+                rec.close_reason, {"eager_folds": 0, "deferred_folds": 0})
+            by[kind] += rec.n_folds
         admitted = self.admission_counts.get("ok", 0)
         rejected = sum(v for k, v in self.admission_counts.items() if k != "ok")
         return {
@@ -128,6 +145,7 @@ class Telemetry:
             "queue_depth_max": self._queue_depth_max,
             "service_s_total": sum(r.service_s for r in self.batches),
             "close_reasons": reasons,
+            "reduction_stalls": stalls,
             "per_workload": per_workload,
             "latency": self.latency.summary(),
             "queue_wait": self.queue_wait.summary(),

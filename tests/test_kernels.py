@@ -81,6 +81,24 @@ def test_staged_transform_with_pallas_kernel():
                                   NTT.matrix_ntt_oracle_np(a, w, m))
 
 
+def test_lazy_kappa_window_with_pallas_kernels():
+    """Full-kernel lazy path: Pallas limb matmul per pass + Pallas mont_fold
+    once per κ-window == eager jnp path (deferred reduction through the
+    kernel ops, paper §7.2.1)."""
+    from repro.kernels import mont_fold_window_fn
+    m, d = F.DILITHIUM_Q, 256
+    w = NTT.ntt_matrix(d, m, negacyclic=True)
+    plan = G.make_channel_plan(w, m, data_limbs=3, tw_limbs=3,
+                               accum="int32_native")
+    a = np.asarray(RNG.integers(0, m, (8, d), dtype=np.uint64), np.uint32)
+    eager, _ = G.staged_transform(jnp.asarray(a), plan, d_max=171)
+    lazy, stats = G.staged_transform(
+        jnp.asarray(a), plan, reduction="lazy", kappa=2, d_max=171,
+        kernel_fn=pallas_tile_fn(), fold_fn=mont_fold_window_fn())
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(lazy))
+    assert stats["n_folds"] == 1 and stats["n_passes"] == 2
+
+
 def test_pallas_fused_transform_matches():
     m, d = F.DILITHIUM_Q, 256
     w = NTT.ntt_matrix(d, m, negacyclic=True)

@@ -1,0 +1,307 @@
+"""Property harness for the deferred (κ-amortised) Montgomery reduction mode.
+
+Proves the paper's §7.2.1 lever end-to-end:
+
+* lazy κ-window accumulation is **bit-for-bit** equal to eager per-pass
+  folding for random polynomials, moduli drawn from :mod:`repro.core.primes`,
+  and every κ in [1, κ_max];
+* the κ_max overflow boundary is sharp — κ_max traces, κ_max + 1 raises —
+  including under adversarial worst-case operands;
+* the HLO validator accepts exactly-one-fold-per-window lazy programs and
+  rejects programs that fold more than once per window or fold eagerly under
+  a lazy label.
+
+Runs under real hypothesis when installed (CI pins a seed via
+``--hypothesis-seed``) and under the deterministic stub in
+``tests/conftest.py`` otherwise.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import accumulator as ACC
+from repro.core import field as F
+from repro.core import limb_gemm as G
+from repro.core import montgomery as MONT
+from repro.core import primes as P
+from repro.core import validator as V
+from repro.core import workloads as WK
+
+RNG = np.random.default_rng(42)
+
+# Moduli pool: the Dilithium prime + NTT-friendly 31-bit primes from the ERNS
+# generator — 4-limb staging; plus small-2-adicity 23-bit primes — 3-limb.
+MODULI_4LIMB = P.ntt_friendly_primes(3, two_adicity=8, max_bits=31)
+MODULI_3LIMB = (F.DILITHIUM_Q,) + P.ntt_friendly_primes(2, two_adicity=6,
+                                                        max_bits=23)
+
+
+def _plan_for(m: int, d: int, limbs: int):
+    w = np.asarray(RNG.integers(0, m, (d, d), dtype=np.uint64), np.uint32)
+    return G.make_channel_plan(w, m, data_limbs=limbs, tw_limbs=limbs,
+                               accum="int32_native")
+
+
+def _rand_rows(m: int, d: int, n: int = 2) -> np.ndarray:
+    return np.asarray(RNG.integers(0, m, (n, d), dtype=np.uint64), np.uint32)
+
+
+# --- lazy == eager, bit for bit, over the whole κ range -----------------------
+
+
+@settings(max_examples=12, deadline=30_000)
+@given(st.integers(0, len(MODULI_3LIMB) + len(MODULI_4LIMB) - 1),
+       st.integers(2, 6),      # passes
+       st.integers(0, 10_000)  # κ selector, mapped into [1, κ_max]
+       )
+def test_lazy_equals_eager_bitforbit(mod_idx, n_passes, kappa_sel):
+    pool = list(MODULI_3LIMB) + list(MODULI_4LIMB)
+    m = pool[mod_idx]
+    limbs = 3 if m in MODULI_3LIMB else 4
+    d_tile = 8
+    d = d_tile * n_passes
+    plan = _plan_for(m, d, limbs)
+    k_max = ACC.kappa_max("int32_native", d_tile, limbs)
+    assert k_max >= n_passes  # tiny tiles: the whole sweep is in-window
+    kappa = 1 + kappa_sel % min(k_max, n_passes + 2)
+    a = jnp.asarray(_rand_rows(m, d))
+    eager, st_e = G.staged_transform(a, plan, reduction="eager", d_max=d_tile)
+    lazy, st_l = G.staged_transform(a, plan, reduction="lazy", d_max=d_tile,
+                                    kappa=kappa)
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(lazy))
+    assert st_e["n_folds"] == n_passes
+    assert st_l["n_folds"] == -(-n_passes // kappa)  # ⌈passes/κ⌉ windows
+
+
+@settings(max_examples=8, deadline=30_000)
+@given(st.integers(0, len(MODULI_3LIMB) - 1), st.integers(2, 4))
+def test_whole_transform_window_and_scan_agree(mod_idx, n_passes):
+    """κ=None (single window) and the scan form match eager exactly."""
+    m = MODULI_3LIMB[mod_idx]
+    d_tile = 8
+    d = d_tile * n_passes
+    plan = _plan_for(m, d, 3)
+    a = jnp.asarray(_rand_rows(m, d))
+    eager, _ = G.staged_transform(a, plan, reduction="eager", d_max=d_tile)
+    lazy, st_l = G.staged_transform(a, plan, reduction="lazy", d_max=d_tile)
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(lazy))
+    assert st_l["n_folds"] == 1
+    y_scan = G.staged_transform_scan(
+        a, jnp.asarray(plan.w_planes), modulus=m, data_limbs=3,
+        accum="int32_native", d_max=d_tile, reduction="lazy", kappa=2)
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(y_scan))
+
+
+# --- the κ_max overflow boundary ----------------------------------------------
+
+
+@pytest.mark.parametrize("limbs,m", [(3, F.DILITHIUM_Q), (4, MODULI_4LIMB[0])])
+def test_kappa_boundary_pass_and_raise(limbs, m):
+    """κ_max traces and stays exact on adversarial worst-case inputs;
+    κ_max + 1 raises at trace time (the analytic overflow assert)."""
+    d_tile = 16
+    k_max = ACC.kappa_max("int32_native", d_tile, limbs)
+    n_passes = min(k_max, 3)
+    d = d_tile * max(n_passes, 2)
+    plan = _plan_for(m, d, limbs)
+    # adversarial rows: every coefficient at the field ceiling maximises the
+    # limb magnitudes feeding the unreduced accumulator
+    worst = np.full((2, d), m - 1, np.uint32)
+    eager, _ = G.staged_transform(jnp.asarray(worst), plan,
+                                  reduction="eager", d_max=d_tile)
+    lazy, _ = G.staged_transform(jnp.asarray(worst), plan, reduction="lazy",
+                                 d_max=d_tile, kappa=n_passes)
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(lazy))
+    with pytest.raises(ValueError, match="kappa_max"):
+        G.staged_transform(jnp.asarray(worst), plan, reduction="lazy",
+                           d_max=d_tile, kappa=k_max + 1)
+
+
+def test_fp32_mantissa_kappa_max_is_one_at_full_tile():
+    """The paper's point: at the fp32 staging ceiling the mantissa window
+    admits no deferral at all — κ_max == 1 — so multi-pass lazy raises."""
+    for la, lw in ((3, 3), (4, 4)):
+        d_max = G.staging_d_max(la, lw, "fp32_mantissa")
+        assert ACC.kappa_max("fp32_mantissa", d_max, min(la, lw)) == 1
+    m, d = F.DILITHIUM_Q, 512
+    plan = G.make_channel_plan(
+        np.asarray(RNG.integers(0, m, (d, d), dtype=np.uint64), np.uint32),
+        m, data_limbs=3, tw_limbs=3)
+    with pytest.raises(ValueError):
+        G.staged_transform(jnp.zeros((1, d), jnp.uint32), plan,
+                           reduction="lazy")
+
+
+def test_oversized_tile_rejected_on_every_path():
+    """A d_tile above the discipline's per-pass ceiling would silently round
+    under fp32 — eager and lazy, unrolled/traced/scan, and engine
+    construction must all refuse it."""
+    m, d = F.DILITHIUM_Q, 512
+    plan = G.make_channel_plan(
+        np.asarray(RNG.integers(0, m, (d, d), dtype=np.uint64), np.uint32),
+        m, data_limbs=3, tw_limbs=3)   # fp32: ceiling 171
+    a = jnp.zeros((1, d), jnp.uint32)
+    w = jnp.asarray(plan.w_planes)
+    with pytest.raises(ValueError, match="per-pass ceiling"):
+        G.staged_transform(a, plan, reduction="eager", d_max=512)
+    with pytest.raises(ValueError, match="per-pass ceiling"):
+        G.staged_transform_traced(a, w, modulus=m, data_limbs=3, d_max=512)
+    with pytest.raises(ValueError, match="per-pass ceiling"):
+        G.staged_transform_scan(a, w, modulus=m, data_limbs=3, d_max=512)
+    with pytest.raises(ValueError, match="per-pass ceiling"):
+        WK.DilithiumEngine(512, d_tile=512)
+
+
+def test_eager_with_kappa_rejected_on_every_variant():
+    """kappa only means something under lazy folding; the unrolled, traced,
+    and scan forms all refuse the eager+kappa combination instead of
+    silently recording a deferral that never happened."""
+    m, d = F.DILITHIUM_Q, 64
+    plan = _plan_for(m, d, 3)
+    a = jnp.zeros((1, d), jnp.uint32)
+    w = jnp.asarray(plan.w_planes)
+    for call in (
+            lambda: G.staged_transform(a, plan, reduction="eager", kappa=8),
+            lambda: G.staged_transform_traced(
+                a, w, modulus=m, data_limbs=3, accum="int32_native", kappa=8),
+            lambda: G.staged_transform_scan(
+                a, w, modulus=m, data_limbs=3, accum="int32_native", kappa=8)):
+        with pytest.raises(ValueError, match="requires reduction='lazy'"):
+            call()
+
+
+def test_lazy_window_accumulator_guards():
+    acc = ACC.LazyWindowAccumulator(97, "int32_native", 3, kappa=2)
+    diag = jnp.ones((1, 8, 5), jnp.int32)
+    acc.add(diag, 8)
+    acc.add(diag, 8)
+    with pytest.raises(ValueError, match="fold first"):
+        acc.add(diag, 8)
+    acc.fold()
+    assert acc.n_folds == 1 and acc.pending == 0
+    with pytest.raises(ValueError, match="empty window"):
+        acc.fold()
+    # a single oversized pass trips the magnitude bound directly
+    huge = ACC.LazyWindowAccumulator(97, "fp32_mantissa", 3, kappa=1)
+    with pytest.raises(ValueError, match="overflow"):
+        huge.add(jnp.ones((1, 999, 5), jnp.int32), 999)
+
+
+# --- engine-level equivalence (what the co-scheduler dispatches) --------------
+
+
+@settings(max_examples=4, deadline=30_000)
+@given(st.integers(0, 3))
+def test_dilithium_engine_lazy_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    a = np.asarray(rng.integers(0, F.DILITHIUM_Q, (3, 256), dtype=np.uint64),
+                   np.uint32)
+    eng = WK.DilithiumEngine(256, accum="int32_native", reduction="lazy",
+                             d_tile=171, kappa=2)
+    assert eng.fold_profile["n_passes"] == 2
+    assert eng.fold_profile["n_folds"] == 1
+    np.testing.assert_array_equal(np.asarray(eng.evaluate(jnp.asarray(a))),
+                                  eng.oracle_np(a))
+
+
+@pytest.mark.parametrize("d_bucket,kappa", [(128, 2), (256, 2), (256, 4),
+                                            (512, 8)])
+def test_dilithium_bucket_sweep_lazy_eq_eager(d_bucket, kappa):
+    """Bucket sweep at the serve path's pow2 d̂: lazy κ-window engines match
+    eager engines bit-for-bit on random rows (d_tile=64 → d̂/64 passes)."""
+    rng = np.random.default_rng(d_bucket)
+    a = jnp.asarray(np.asarray(
+        rng.integers(0, F.DILITHIUM_Q, (2, d_bucket), dtype=np.uint64),
+        np.uint32))
+    lazy = WK.DilithiumEngine(d_bucket, accum="int32_native",
+                              reduction="lazy", d_tile=64, kappa=kappa)
+    eager = WK.DilithiumEngine(d_bucket, accum="int32_native",
+                               reduction="eager", d_tile=64)
+    np.testing.assert_array_equal(np.asarray(lazy.evaluate(a)),
+                                  np.asarray(eager.evaluate(a)))
+    assert lazy.fold_profile["n_folds"] == -(-(d_bucket // 64) // kappa)
+
+
+def test_bn254_engine_lazy_matches_eager():
+    d = 32
+    rng = np.random.default_rng(5)
+    coeffs = np.array([[int.from_bytes(rng.bytes(16), "little")
+                        for _ in range(d)] for _ in range(2)], object)
+    lazy_eng = WK.BN254Engine(d, accum="int32_native", reduction="lazy")
+    eager_eng = WK.BN254Engine(d, accum="int32_native", reduction="eager")
+    a = lazy_eng.ingest(coeffs)
+    np.testing.assert_array_equal(np.asarray(lazy_eng.e2e(a)),
+                                  np.asarray(eager_eng.e2e(a)))
+    assert lazy_eng.fold_profile["n_folds"] == lazy_eng.n_channels
+
+
+# --- HLO validator: one fold per window, no re-fusion back to eager -----------
+
+
+def _lazy_fn(plan, d_tile, kappa):
+    def fn(x):
+        y, _ = G.staged_transform(x, plan, reduction="lazy", d_max=d_tile,
+                                  kappa=kappa)
+        return y
+    return fn
+
+
+def test_validator_accepts_kappa_windows():
+    m, d_tile, n_passes = F.DILITHIUM_Q, 32, 4
+    plan = _plan_for(m, d_tile * n_passes, 3)
+    for kappa, windows in ((1, 4), (2, 2), (4, 1)):
+        rep = V.validate_fn(_lazy_fn(plan, d_tile, kappa),
+                            jnp.zeros((2, plan.d), jnp.uint32),
+                            expect_eager=False, expected_windows=windows,
+                            n_diag=plan.n_diag)
+        rep.raise_if_failed()
+
+
+def test_validator_rejects_multifold_window():
+    """A lazy-labelled program folding twice inside one window is rejected
+    (V7): more than one reduction per window is eager in disguise."""
+    m, d = F.DILITHIUM_Q, 64
+    plan = _plan_for(m, d, 3)
+    mm = jnp.uint32(m)
+
+    def double_fold(x):
+        diag = G.tile_diagonals(x, None, jnp.asarray(plan.fused_operand), plan)
+        with jax.named_scope("lazy_window_0"), jax.named_scope("vpu_fold_lazy"):
+            y1 = MONT.fold_diagonals_lax(diag, mm)
+            y2 = MONT.fold_diagonals_lax(diag + jnp.int32(1), mm)
+        return F.addmod_u32(y1, y2, mm)
+
+    rep = V.validate_fn(double_fold, jnp.zeros((2, d), jnp.uint32),
+                        expect_eager=False, expected_windows=1,
+                        n_diag=plan.n_diag)
+    assert not rep.ok and any(v[0] == "V7" for v in rep.violations)
+    with pytest.raises(V.ValidationError):
+        rep.raise_if_failed()
+
+
+def test_validator_rejects_eager_folds_in_lazy_module():
+    """An eager per-pass program audited as lazy fails V6 twice over: the
+    expected windows are missing and per-pass folds are present."""
+    m, d_tile, n_passes = F.DILITHIUM_Q, 32, 3
+    plan = _plan_for(m, d_tile * n_passes, 3)
+
+    def eager_fn(x):
+        y, _ = G.staged_transform(x, plan, reduction="eager", d_max=d_tile)
+        return y
+
+    rep = V.validate_fn(eager_fn, jnp.zeros((2, plan.d), jnp.uint32),
+                        expect_eager=False, expected_windows=1,
+                        n_diag=plan.n_diag)
+    assert not rep.ok and any(v[0] == "V6" for v in rep.violations)
+
+
+def test_fold_census_counts_kappa_windows():
+    m, d_tile, n_passes = F.DILITHIUM_Q, 32, 4
+    plan = _plan_for(m, d_tile * n_passes, 3)
+    z = jnp.zeros((2, plan.d), jnp.uint32)
+    c2 = V.fold_census(_lazy_fn(plan, d_tile, 2), z)
+    assert c2["n_lazy_windows"] == 2 and c2["n_fold_scopes"] == 2
+    c4 = V.fold_census(_lazy_fn(plan, d_tile, 4), z)
+    assert c4["n_lazy_windows"] == 1

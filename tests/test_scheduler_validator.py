@@ -155,6 +155,24 @@ def test_dispatch_mixed_order_and_nonblocking(monkeypatch):
                                           eng.oracle_np(iso)[0])
 
 
+def test_coscheduler_rejects_bad_reduction():
+    """A typo'd reduction mode must fail construction, not silently trace
+    the eager path (the string used to pass through unvalidated)."""
+    with pytest.raises(ValueError, match="unknown reduction mode"):
+        SliceCoScheduler(reduction="lzay")
+    with pytest.raises(ValueError, match="unknown reduction mode"):
+        SliceCoScheduler(reduction_by_workload={"dilithium": "Lazy"})
+    with pytest.raises(ValueError, match="unknown workload class"):
+        SliceCoScheduler(reduction_by_workload={"dilithum": "lazy"})
+    # engines and the raw transform guard the same surface
+    with pytest.raises(ValueError, match="unknown reduction mode"):
+        WK.DilithiumEngine(64, reduction="eagr")
+    cos = SliceCoScheduler(reduction="lazy",
+                           reduction_by_workload={"bn254": "eager"})
+    assert cos.reduction_for("dilithium") == "lazy"
+    assert cos.reduction_for("bn254") == "eager"
+
+
 def test_coscheduler_mixed_dispatch():
     rng = np.random.default_rng(9)
     cos = SliceCoScheduler()

@@ -208,6 +208,66 @@ def test_online_matches_offline_bitforbit():
     assert set(snap["per_workload"]) == {"dilithium", "bn254"}
 
 
+def test_mixed_eager_lazy_tenants_match_all_eager_offline():
+    """Satellite regression for the deferred-reduction serve path: one
+    CryptoServer co-schedules lazy (κ-amortised) Dilithium tenants next to
+    strictly-eager BN254 tenants; every per-tenant row is bit-for-bit equal
+    to the all-eager offline replay of the same trace, HLO validation runs in
+    both disciplines, and the telemetry fold counters split eager vs deferred
+    stalls per close reason."""
+    kw = dict(duration_s=0.01, rate_hz=1024, seed=11, d_uniform=256)
+    offline_cos = SliceCoScheduler(accum="int32_native", d_tile=171)
+    offline_results, n_ops, _ = serve_crypto(validate=True,
+                                             coscheduler=offline_cos, **kw)
+    offline = {}
+    for res in offline_results:
+        offline.update(res.outputs)
+
+    load, snap, _ = serve_crypto_online(
+        max_age_s=0.002, validate=True, accum="int32_native", d_tile=171,
+        reduction_by_workload={"dilithium": "lazy"}, **kw)
+    assert set(load.outputs) == set(offline) and n_ops == len(offline)
+    for tid, row in offline.items():
+        np.testing.assert_array_equal(load.outputs[tid], row)
+    assert set(snap["per_workload"]) == {"dilithium", "bn254"}
+
+    # fold counters: lazy Dilithium (256-bucket, tile 171 → 2 passes) defers
+    # to one fold per batch; eager BN254 (64-bucket, 1 pass × 9 channels)
+    # folds nine times per batch.
+    assert snap["per_workload"]["dilithium"]["reduction"] == "lazy"
+    assert snap["per_workload"]["bn254"]["reduction"] == "eager"
+    n_dil = snap["per_workload"]["dilithium"]["batches"]
+    n_bn = snap["per_workload"]["bn254"]["batches"]
+    stalls = snap["reduction_stalls"]
+    assert stalls["deferred_folds"] == n_dil * 1
+    assert stalls["eager_folds"] == n_bn * 9
+    # per-close-reason split is complete and consistent with the totals
+    by = stalls["by_close_reason"]
+    assert set(by) == set(snap["close_reasons"])
+    assert sum(v["eager_folds"] for v in by.values()) == stalls["eager_folds"]
+    assert sum(v["deferred_folds"] for v in by.values()) \
+        == stalls["deferred_folds"]
+
+
+def test_coscheduler_mixed_reduction_dispatch_isolated():
+    """dispatch_mixed with per-workload reduction: the lazy class's engines
+    defer folds, the eager class's do not, and both come back exact."""
+    cos = SliceCoScheduler(accum="int32_native", d_tile=171,
+                           reduction_by_workload={"dilithium": "lazy"})
+    assert cos.reduction_for("dilithium") == "lazy"
+    assert cos.reduction_for("bn254") == "eager"
+    from repro.core.scheduler import RectangularScheduler
+    sched = RectangularScheduler(n_c=2, bucket_granularity=256)
+    reqs = [_dil_request(i, 256) for i in range(2)]
+    res = cos.dispatch_mixed(sched.plan_batches(reqs))[0]
+    assert res.stats["reduction"] == "lazy" and res.stats["n_folds"] == 1
+    assert res.stats["n_passes"] == 2
+    eng = cos.engine_for("dilithium", 256)
+    for r in reqs:
+        np.testing.assert_array_equal(res.outputs[r.tenant_id],
+                                      eng.oracle_np(r.coeffs[None, :])[0])
+
+
 # --- telemetry -----------------------------------------------------------------
 
 def test_latency_histogram_percentiles():

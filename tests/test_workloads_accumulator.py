@@ -18,6 +18,49 @@ def test_table1_pattern_matches_paper():
     assert rows["tpu_v5_int32_native"] == [True] * 7
 
 
+def test_exact_window_bruteforce_matches_formula():
+    """The dtype-probed exactness windows equal the analytic W(accum)."""
+    assert ACC.exact_window_bruteforce("fp32_mantissa") == 1 << 24
+    assert ACC.exact_window_bruteforce("int32_native") == (1 << 31) - 1
+    assert ACC.accumulator_window("fp32_mantissa") == 1 << 24
+    assert ACC.accumulator_window("int32_native") == (1 << 31) - 1
+
+
+@pytest.mark.parametrize("d_tile,la,lw", [(1, 2, 2), (2, 2, 2), (2, 3, 2),
+                                          (3, 2, 3), (1, 3, 3)])
+@pytest.mark.parametrize("accum", ["fp32_mantissa", "int32_native"])
+def test_kappa_max_formula_matches_bruteforce(accum, d_tile, la, lw):
+    """The derived κ_max formula equals exhaustive search on small word
+    sizes, for both accumulator disciplines: brute-force the worst-case
+    per-pass diagonal over all extreme operand assignments, brute-force the
+    exact window by dtype probing, and divide."""
+    got = ACC.kappa_max(accum, d_tile, min(la, lw))
+    want = ACC.kappa_max_bruteforce(accum, d_tile, la, lw)
+    assert got == want, (accum, d_tile, la, lw, got, want)
+    # the analytic per-pass triangle bound is tight, not just an upper bound
+    assert ACC.pass_bound(d_tile, min(la, lw)) == \
+        ACC.pass_bound_bruteforce(d_tile, la, lw)
+
+
+def test_kappa_max_paper_values():
+    """Paper §7.2.1 anchors: at the fp32-era staging tiles, int32 admits
+    κ = 128 deferred passes for both workload classes; fp32 admits none."""
+    assert ACC.kappa_max("int32_native", 171, 3) == 128   # Dilithium tile
+    assert ACC.kappa_max("int32_native", 128, 4) == 128   # BN254 tile
+    assert ACC.kappa_max("fp32_mantissa", 171, 3) == 1
+    assert ACC.kappa_max("fp32_mantissa", 128, 4) == 1
+
+
+def test_window_plan_shapes():
+    assert ACC.window_plan(6, 2, 100) == (2, 2, 2)
+    assert ACC.window_plan(5, 2, 100) == (2, 2, 1)
+    assert ACC.window_plan(3, None, 3) == (3,)
+    with pytest.raises(ValueError):
+        ACC.window_plan(3, None, 2)      # whole-transform window too deep
+    with pytest.raises(ValueError):
+        ACC.window_plan(3, 0, 2)
+
+
 def test_dilithium_engine_exact():
     eng = WK.DilithiumEngine(256)
     assert eng.n_passes == 2  # 171 + 85
