@@ -1,0 +1,170 @@
+"""BENCH_cluster — multi-host sharded serving sweep.
+
+Drives the :mod:`repro.cluster` runtime over a grid of arrival rates ×
+host counts × tenant-id distributions and emits one JSON point per cell:
+merged p50/p95/p99 latency, per-host occupancy, load-imbalance (max/mean,
+cv), gossip staleness audit, and the drain-barrier record.  The tenant
+distributions are the interesting axis — ``unique`` spreads load
+hash-uniformly, ``zipf`` models realistic skew, and ``hot`` is the
+adversarial single-hot-tenant case where the whole offered load lands on
+one host and the fleet's spare capacity is unreachable by design (the
+paper's §7 economics measured at cluster scale).
+
+  PYTHONPATH=src python benchmarks/bench_cluster.py [--rates 512,1024]
+      [--hosts 1,2,4] [--dists unique,zipf,hot] [--duration 0.02]
+      [--out bench_cluster.json] [--dry-run]
+
+Also exposes ``run()`` yielding the aggregator's CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+# repo root, cwd-independent (benchmarks/ run as a script)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import (RATE_LADDER_FAST, make_trace,  # noqa: E402
+                               parse_rate_ladder)
+
+HOST_LADDER = (1, 2, 4)
+DISTRIBUTIONS = ("unique", "zipf", "hot")
+
+
+def sweep(rates=RATE_LADDER_FAST, hosts=HOST_LADDER, dists=DISTRIBUTIONS, *,
+          duration_s=0.02, n_c=8, max_age_s=0.005, d_uniform=256, seed=0,
+          n_tenants=64, gossip_period_s=0.002,
+          coscheduler_factory=None) -> list[dict]:
+    from repro.launch.serve import serve_crypto_cluster
+
+    points = []
+    for dist in dists:
+        for rate in rates:
+            trace = make_trace(rate, duration_s, d_uniform=d_uniform,
+                               seed=seed, tenants=dist, n_tenants=n_tenants)
+            for n_hosts in hosts:
+                t0 = time.time()
+                load, snap, dt = serve_crypto_cluster(
+                    hosts=n_hosts, n_c=n_c, max_age_s=max_age_s, seed=seed,
+                    validate=False,      # HLO validation is tested elsewhere;
+                                         # this sweep measures the fleet path
+                    gossip_period_s=gossip_period_s, trace=trace,
+                    coscheduler_factory=coscheduler_factory)
+                served = sum(1 for h in load.handles
+                             if h.done() and not h.rejected)
+                m = snap["merged"]
+                points.append({
+                    "rate_hz": rate,
+                    "hosts": n_hosts,
+                    "tenant_dist": dist,
+                    "duration_s": duration_s,
+                    "n_c": n_c,
+                    "wall_s": dt,
+                    "served": served,
+                    "rejected": len(load.rejected),
+                    "batches": m["batches"],
+                    "close_reasons": m["close_reasons"],
+                    "k_occupancy_mean": m["k_occupancy_mean"],
+                    "m_occupancy_mean": m["m_occupancy_mean"],
+                    "queue_depth_max": m["queue_depth_max"],
+                    "p50_s": m["latency"]["p50_s"],
+                    "p95_s": m["latency"]["p95_s"],
+                    "p99_s": m["latency"]["p99_s"],
+                    "imbalance_max_over_mean":
+                        m["load_imbalance"]["max_over_mean"],
+                    "imbalance_cv": m["load_imbalance"]["cv"],
+                    "per_host_requests":
+                        m["load_imbalance"]["per_host_requests"],
+                    "gossip": snap["gossip"],
+                    "drain_barrier": snap["drain_barrier"],
+                    "setup_wall_s": time.time() - t0,
+                })
+    return points
+
+
+def run(fast: bool = True):
+    """Aggregator entry point: ``name,us_per_call,derived`` CSV rows."""
+    from repro.core.scheduler.coscheduler import SliceCoScheduler
+
+    hosts = (1, 2) if fast else HOST_LADDER
+    rates = RATE_LADDER_FAST if fast else RATE_LADDER_FAST + (2048,)
+    shared = SliceCoScheduler()      # one compiled-program cache per sweep —
+                                     # latency is virtual-clock, so per-cell
+                                     # recompiles would only burn wall time
+    for pt in sweep(rates, hosts, coscheduler_factory=lambda h: shared):
+        yield (f"cluster.h{pt['hosts']}.{pt['tenant_dist']}"
+               f".rate{pt['rate_hz']},"
+               f"{pt['p50_s'] * 1e6:.2f},"
+               f"p99={pt['p99_s'] * 1e6:.0f}us"
+               f";imbalance={pt['imbalance_max_over_mean']:.2f}"
+               f";k_occ={pt['k_occupancy_mean']:.3f}"
+               f";served={pt['served']};rejected={pt['rejected']}")
+
+
+def dry_run() -> dict:
+    """CI smoke: one tiny grid cell per distribution on a 3-host cluster;
+    asserts the fleet invariants (everything served, barrier complete,
+    staleness bound honored, hot tenant collapses onto one host)."""
+    from repro.core.scheduler.coscheduler import SliceCoScheduler
+
+    shared = SliceCoScheduler()          # one compiled-program cache for all
+    points = sweep(rates=(512,), hosts=(3,), dists=("unique", "hot"),
+                   duration_s=0.005, max_age_s=0.002,
+                   coscheduler_factory=lambda h: shared)
+    for pt in points:
+        assert pt["served"] > 0 and pt["rejected"] == 0, pt
+        assert pt["drain_barrier"]["complete"], pt
+        g = pt["gossip"]
+        assert g["used_staleness_max_s"] <= g["staleness_bound_s"], g
+    hot = next(pt for pt in points if pt["tenant_dist"] == "hot")
+    per_host = hot["per_host_requests"]
+    assert sorted(per_host)[:-1] == [0, 0], per_host   # one hot host only
+    assert hot["imbalance_max_over_mean"] > 2.5, hot
+    return {"points": points}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rates", default="512,1024")
+    ap.add_argument("--hosts", default="1,2,4")
+    ap.add_argument("--dists", default="unique,zipf,hot")
+    ap.add_argument("--duration", type=float, default=0.02)
+    ap.add_argument("--n-c", type=int, default=8)
+    ap.add_argument("--max-age-ms", type=float, default=5.0)
+    ap.add_argument("--d-uniform", type=int, default=256)
+    ap.add_argument("--n-tenants", type=int, default=64)
+    ap.add_argument("--gossip-period-ms", type=float, default=2.0)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny 3-host grid + fleet-invariant asserts (CI)")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        doc = dry_run()
+        print(f"dry run ok: {len(doc['points'])} points, "
+              f"hot-tenant imbalance "
+              f"{doc['points'][-1]['imbalance_max_over_mean']:.2f}")
+        return
+
+    points = sweep(parse_rate_ladder(args.rates),
+                   tuple(int(h) for h in args.hosts.split(",")),
+                   tuple(args.dists.split(",")),
+                   duration_s=args.duration, n_c=args.n_c,
+                   max_age_s=args.max_age_ms / 1e3, d_uniform=args.d_uniform,
+                   n_tenants=args.n_tenants,
+                   gossip_period_s=args.gossip_period_ms / 1e3)
+    doc = {"bench": "cluster", "points": points}
+    text = json.dumps(doc, indent=2, sort_keys=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+        print(f"wrote {len(points)} points → {args.out}")
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,12 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
+
+# repo root, cwd-independent (benchmarks/ run as a script)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def sweep(rates=(512, 1024, 2048), *, duration_s=0.02, n_c=8,
@@ -54,7 +59,9 @@ def sweep(rates=(512, 1024, 2048), *, duration_s=0.02, n_c=8,
 
 def run(fast: bool = True):
     """Aggregator entry point: ``name,us_per_call,derived`` CSV rows."""
-    rates = (512, 1024) if fast else (512, 1024, 2048, 4096)
+    from benchmarks.common import RATE_LADDER_FAST, RATE_LADDER_FULL
+
+    rates = RATE_LADDER_FAST if fast else RATE_LADDER_FULL
     for pt in sweep(rates):
         yield (f"serve.online.rate{pt['rate_hz']},"
                f"{pt['p50_s'] * 1e6:.2f},"
@@ -74,7 +81,9 @@ def main():
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
-    points = sweep(tuple(int(r) for r in args.rates.split(",")),
+    from benchmarks.common import parse_rate_ladder
+
+    points = sweep(parse_rate_ladder(args.rates),
                    duration_s=args.duration, n_c=args.n_c,
                    max_age_s=args.max_age_ms / 1e3, d_uniform=args.d_uniform)
     doc = {"bench": "serve_online", "points": points}

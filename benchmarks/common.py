@@ -27,6 +27,54 @@ def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.2f},{derived}"
 
 
+# --- Rate ladders + trace generation (shared by bench_serve / bench_cluster) --
+RATE_LADDER_FAST = (512, 1024)
+RATE_LADDER_FULL = (512, 1024, 2048, 4096)
+
+
+def parse_rate_ladder(spec: str) -> tuple[int, ...]:
+    """'512,1024,2048' → (512, 1024, 2048) — the CLI rate-ladder format."""
+    return tuple(int(r) for r in spec.split(","))
+
+
+def make_trace(rate_hz: float, duration_s: float, *, d_uniform: int | None = None,
+               seed: int = 0, tenants: str = "unique", n_tenants: int = 64,
+               zipf_a: float = 1.5, accum: str = "fp32_mantissa") -> list:
+    """Poisson trace with payloads and a chosen tenant-id distribution.
+
+    ``tenants`` shapes how requests map to tenant ids — the lever that
+    stresses a tenant-hash ingress:
+
+    * ``"unique"`` — every request its own tenant (the PoissonTrace default;
+      hash routing spreads load near-uniformly);
+    * ``"zipf"``   — requests drawn from ``n_tenants`` tenants with Zipf
+      exponent ``zipf_a`` (realistic skew: a few tenants dominate);
+    * ``"hot"``    — adversarial single hot tenant owning every request
+      (worst-case: the whole load lands on one host).
+
+    Payloads are attached per request in arrival order, so two traces that
+    differ only in tenant assignment carry identical coefficient streams.
+    """
+    from repro.core.scheduler import PoissonTrace
+    from repro.serve.client import attach_payloads
+
+    trace = PoissonTrace(rate_hz=rate_hz, duration_s=duration_s,
+                         uniform_degree=d_uniform, seed=seed).generate()
+    if tenants == "zipf":
+        rng = np.random.default_rng(seed + 1)
+        ranks = (rng.zipf(zipf_a, len(trace)) - 1) % n_tenants
+        for req, rank in zip(trace, ranks):
+            req.tenant_id = int(rank)
+    elif tenants == "hot":
+        for req in trace:
+            req.tenant_id = 0
+    elif tenants != "unique":
+        raise ValueError(f"unknown tenant distribution {tenants!r} "
+                         f"(want unique | zipf | hot)")
+    attach_payloads(trace, seed=seed, accum=accum)
+    return trace
+
+
 # --- Recorded constants from the paper (GPU baselines + cloud pricing) --------
 # These are *external reference points* (paper §7.1, Table 2) — the deficit
 # reproduction is derived arithmetic over them + our measured structure.

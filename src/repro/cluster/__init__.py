@@ -1,0 +1,32 @@
+"""repro.cluster — multi-host sharded serving on one machine.
+
+The paper's fleet-economics framing (§2, §7: per-pod cost deficits,
+multi-tenant spatial collapse) needs cross-host effects to be measurable:
+skewed tenant load, admission on stale global queue depth, coordinated
+drains.  This package shards the single-host :mod:`repro.serve` runtime
+across N simulated host slices, all under the same deterministic virtual
+clock:
+
+* :mod:`router`    — tenant-hash ingress (stable CRC32 partition, explicit
+  tenant→host pinning overrides);
+* :mod:`gossip`    — per-host queue-depth digests on a configurable period;
+  the SLO admission gate consumes bounded-staleness *cluster* state, and
+  staleness is audited, never hidden;
+* :mod:`cluster`   — ``ClusterServer``: one ``CryptoServer`` +
+  ``SliceCoScheduler`` per host, a two-phase distributed drain barrier
+  (quiesce ingress everywhere → drain every host → collect), and the same
+  explicit-clock surface as a single server so ``LoadGenerator`` drives a
+  cluster unchanged;
+* :mod:`telemetry` — merges K per-host JSON snapshots into cluster-level
+  p50/p95/p99 (exact, via raw samples), per-host occupancy, and
+  load-imbalance metrics.
+
+Cluster drains are bit-for-bit equivalent to a single-host replay of the
+same trace (``tests/test_cluster.py`` sweeps N ∈ {1, 2, 4} with mixed
+eager/lazy reduction classes).
+"""
+from repro.cluster.cluster import ClusterConfig, ClusterServer
+from repro.cluster.gossip import ClusterView, GossipBus, HostDigest
+from repro.cluster.router import TenantHashRouter, stable_tenant_hash
+from repro.cluster.telemetry import (MERGE_TOLERANCE_REL, load_imbalance,
+                                     merge_snapshots)

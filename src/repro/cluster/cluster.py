@@ -1,0 +1,170 @@
+"""Multi-host sharded serving: the cluster event loop.
+
+``ClusterServer`` shards :class:`repro.serve.CryptoServer` across N
+simulated host slices, each owning its own
+:class:`~repro.core.scheduler.coscheduler.SliceCoScheduler` (its own
+engines, compiled-program cache, and device-group assignment):
+
+    submit ──▶ tenant-hash router ──▶ host h: admission ──▶ batcher ──▶
+                    │                      ▲                 dispatch
+                    │                      │ per-host-equivalent cluster
+                    └── gossip bus ────────┘ depth (bounded staleness)
+
+The cluster exposes the same explicit-clock surface as a single server
+(``submit(req, now)`` / ``pump(now)`` / ``next_deadline()`` /
+``drain(now)``), so the existing :class:`repro.serve.LoadGenerator` drives
+an N-host cluster unchanged, deterministically, under the virtual clock.
+
+**Drain barrier.**  ``drain`` is two-phase: first *every* host is quiesced
+(ingress rejected fleet-wide), only then is any host flushed, and finally
+the barrier record is collected into telemetry.  Quiescing all before
+flushing any means no request can slip onto an already-drained host, so a
+cluster drain yields bit-for-bit the same per-tenant results as a
+single-host replay of the same trace (row semantics make each tenant's
+arithmetic independent of batch composition; the router only changes the
+grouping).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+from repro.core.scheduler.coscheduler import SliceCoScheduler
+from repro.serve.server import CryptoServer, ServeConfig
+from repro.cluster.gossip import GossipBus
+from repro.cluster.router import TenantHashRouter
+from repro.cluster.telemetry import merge_snapshots
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    n_hosts: int = 2
+    gossip_period_s: float = 0.002
+    gossip_staleness_factor: float = 2.0   # digest usable for period × factor
+    pinned: dict | None = None             # tenant_id -> host overrides
+    serve: ServeConfig = dataclasses.field(default_factory=ServeConfig)
+
+
+class ClusterServer:
+    """N host slices behind one tenant-hash ingress.
+
+    ``coscheduler_factory(host_id)`` overrides per-host co-scheduler
+    construction — tests use it to share one compiled-program cache across
+    hosts (bit-identical results, minutes less XLA compile time); production
+    construction gives every host its own.
+    """
+
+    def __init__(self, config: ClusterConfig | None = None, *,
+                 coscheduler_factory=None):
+        self.config = cfg = config or ClusterConfig()
+        self.router = TenantHashRouter(cfg.n_hosts, pinned=cfg.pinned)
+        self.gossip = GossipBus(cfg.n_hosts, period_s=cfg.gossip_period_s,
+                                staleness_factor=cfg.gossip_staleness_factor)
+        self.hosts: list[CryptoServer] = []
+        for h in range(cfg.n_hosts):
+            if coscheduler_factory is not None:
+                cos = coscheduler_factory(h)
+            else:
+                s = cfg.serve
+                cos = SliceCoScheduler(
+                    accum=s.accum, reduction=s.reduction,
+                    reduction_by_workload=s.reduction_by_workload,
+                    kappa=s.kappa, d_tile=s.d_tile, host=h)
+            srv = CryptoServer(cfg.serve, coscheduler=cos)
+            srv.cluster_depth_fn = self._make_depth_fn(h)
+            self.hosts.append(srv)
+        self._submissions = [0] * cfg.n_hosts
+        self._barrier: dict | None = None
+
+    # --- gossip wiring --------------------------------------------------------
+
+    def _make_depth_fn(self, host_id: int):
+        def depth_fn(now: float) -> float:
+            view = self.gossip.cluster_view(
+                host_id, self.hosts[host_id].batcher.depth, now)
+            return view.per_host_equiv
+        return depth_fn
+
+    def _tick(self, now: float):
+        """Run every due gossip publish (period-gated per host)."""
+        for h, srv in enumerate(self.hosts):
+            self.gossip.maybe_publish(h, srv.batcher.depth, now,
+                                      open_batches=srv.batcher.open_batches)
+
+    # --- the CryptoServer-shaped surface --------------------------------------
+
+    def submit(self, req, now: float | None = None):
+        now = time.monotonic() if now is None else now
+        self._tick(now)
+        host = self.router.host_for(req.tenant_id)
+        self._submissions[host] += 1
+        return self.hosts[host].submit(req, now=now)
+
+    def pump(self, now: float | None = None) -> int:
+        now = time.monotonic() if now is None else now
+        self._tick(now)
+        return sum(srv.pump(now) for srv in self.hosts)
+
+    def next_deadline(self) -> float | None:
+        deadlines = [d for srv in self.hosts
+                     if (d := srv.next_deadline()) is not None]
+        return min(deadlines) if deadlines else None
+
+    @property
+    def under_backpressure(self) -> bool:
+        return any(srv.under_backpressure for srv in self.hosts)
+
+    def drain(self, now: float | None = None) -> int:
+        """Distributed two-phase drain barrier (see module docstring)."""
+        now = time.monotonic() if now is None else now
+        # Phase 1 — quiesce: fleet-wide ingress stop before any flush.
+        for srv in self.hosts:
+            srv.quiesce(now)
+        self._barrier = {"quiesced_at": now,
+                         "hosts": len(self.hosts),
+                         "complete": False}
+        # Phase 2 — drain: flush every host's open batches.
+        flushed = sum(srv.drain(now) for srv in self.hosts)
+        # Phase 3 — collect: the barrier record lands in telemetry.
+        self._barrier.update(drained_at=now, batches_flushed=flushed,
+                             complete=True)
+        return flushed
+
+    @property
+    def drained(self) -> bool:
+        return bool(self._barrier and self._barrier["complete"])
+
+    # --- telemetry ------------------------------------------------------------
+
+    def snapshot(self, include_samples: bool = False) -> dict:
+        """Cluster snapshot: merged fleet metrics + per-host + gossip audit.
+
+        Per-host snapshots always carry raw samples internally so the merged
+        quantiles are exact; ``include_samples`` controls whether they stay
+        in the exported per-host sections.
+        """
+        host_snaps = [srv.telemetry.snapshot(include_samples=True)
+                      for srv in self.hosts]
+        merged = merge_snapshots(host_snaps)
+        if not include_samples:
+            for snap in host_snaps:
+                snap["latency"].pop("samples", None)
+                snap["queue_wait"].pop("samples", None)
+        return {
+            "n_hosts": len(self.hosts),
+            "merged": merged,
+            "per_host": host_snaps,
+            "gossip": self.gossip.snapshot(),
+            "routing": {
+                "per_host_submissions": list(self._submissions),
+                "pinned_tenants": len(self.router.pinned),
+            },
+            "drain_barrier": self._barrier,
+        }
+
+    def write_json(self, path: str, include_samples: bool = False) -> dict:
+        snap = self.snapshot(include_samples=include_samples)
+        with open(path, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True)
+        return snap

@@ -1,0 +1,51 @@
+"""Tenant-hash ingress routing.
+
+Every request enters the cluster through one stateless function: tenant →
+host.  Stability matters more than balance here — a tenant must land on the
+same host for its whole session so per-tenant state (token buckets, open
+batch rows) never splits across hosts, and the mapping must be reproducible
+across processes and Python runs (``hash()`` is salted per process; CRC32
+is not).  Balance comes from the hash's uniformity; skewed *load* (one hot
+tenant) is exactly what the gossip layer and the bench's adversarial
+distributions are there to expose, not something the router hides.
+
+``pinned`` overrides the hash per tenant — the operational escape hatch for
+isolating a noisy tenant on its own host or co-locating tenants that share
+compiled programs.
+"""
+from __future__ import annotations
+
+import zlib
+
+
+def stable_tenant_hash(tenant_id) -> int:
+    """Process-independent 32-bit hash of a tenant id (int or str)."""
+    return zlib.crc32(str(tenant_id).encode("utf-8")) & 0xFFFFFFFF
+
+
+class TenantHashRouter:
+    """Stable hash partition of tenants onto ``n_hosts`` host slices."""
+
+    def __init__(self, n_hosts: int,
+                 pinned: dict | None = None):
+        if n_hosts < 1:
+            raise ValueError(f"n_hosts must be >= 1 (got {n_hosts})")
+        self.n_hosts = n_hosts
+        self.pinned = dict(pinned or {})
+        for tid, host in self.pinned.items():
+            if not 0 <= host < n_hosts:
+                raise ValueError(f"pinned tenant {tid!r} -> host {host} "
+                                 f"outside [0, {n_hosts})")
+
+    def host_for(self, tenant_id) -> int:
+        pin = self.pinned.get(tenant_id)
+        if pin is not None:
+            return pin
+        return stable_tenant_hash(tenant_id) % self.n_hosts
+
+    def partition(self, tenant_ids) -> dict[int, list]:
+        """Group tenant ids by destination host (diagnostics / benchmarks)."""
+        out: dict[int, list] = {h: [] for h in range(self.n_hosts)}
+        for tid in tenant_ids:
+            out[self.host_for(tid)].append(tid)
+        return out

@@ -1,0 +1,167 @@
+"""Cluster telemetry: merging per-host snapshots into fleet-level metrics.
+
+Each host exports the same JSON snapshot a single-host server does; the
+cluster layer merges K of them into one document.  Counters and sums merge
+exactly.  Means merge exactly because each snapshot carries its weight
+(batch / request counts).  Quantiles do **not** merge from summaries — the
+p99 of per-host p99s is not the cluster p99 — so per-host snapshots in
+cluster mode carry their raw latency samples and the merge recomputes
+quantiles over the concatenation:
+
+* with samples present (``merged_exact: true``): merged quantiles equal the
+  quantiles of the concatenated per-request records up to float round-off
+  (the documented tolerance is 1e-9 relative);
+* without samples (``merged_exact: false``): quantiles fall back to a
+  count-weighted mean of the per-host quantiles — an approximation whose
+  error grows with cross-host spread; ``max_s`` stays exact (max of maxes).
+
+Load imbalance is the cluster-only signal: requests per host, the
+max/mean ratio (1.0 = perfectly even), and the coefficient of variation.
+A single hot tenant drives max/mean toward the host count — the spatial
+collapse regime the paper prices out per pod (§7).
+"""
+from __future__ import annotations
+
+import math
+
+from repro.serve.telemetry import LatencyHistogram
+
+MERGE_TOLERANCE_REL = 1e-9   # documented float-roundoff bound (exact path)
+
+
+def _merge_counter_dicts(dicts) -> dict:
+    out: dict = {}
+    for d in dicts:
+        for k, v in d.items():
+            out[k] = out.get(k, 0) + v
+    return out
+
+
+def _weighted_mean(pairs) -> float:
+    """pairs: (value, weight).  0.0 when all weights are zero."""
+    total = sum(w for _, w in pairs)
+    if not total:
+        return 0.0
+    return sum(v * w for v, w in pairs) / total
+
+
+def _merge_histograms(summaries: list[dict]) -> dict:
+    """Merge per-host latency/queue-wait summaries (see module docstring)."""
+    if all("samples" in s for s in summaries):
+        h = LatencyHistogram()
+        for s in summaries:
+            for v in s["samples"]:
+                h.observe(v)
+        merged = h.summary()
+        merged["merged_exact"] = True
+        return merged
+    counts = [s.get("count", 0) for s in summaries]
+    merged = {"count": sum(counts),
+              "mean_s": _weighted_mean(
+                  [(s.get("mean_s", 0.0), c) for s, c in zip(summaries,
+                                                             counts)]),
+              "max_s": max((s.get("max_s", 0.0) for s in summaries),
+                           default=0.0),
+              "merged_exact": False}
+    for q in ("p50_s", "p95_s", "p99_s"):
+        merged[q] = _weighted_mean(
+            [(s.get(q, 0.0), c) for s, c in zip(summaries, counts)])
+    return merged
+
+
+def _merge_per_workload(snaps: list[dict]) -> dict:
+    out: dict = {}
+    for snap in snaps:
+        for wname, w in snap.get("per_workload", {}).items():
+            m = out.setdefault(wname, {
+                "batches": 0, "requests": 0, "folds": 0,
+                "reduction": w["reduction"],
+                "_k_sum": 0.0, "_m_sum": 0.0})
+            if m["reduction"] != w["reduction"]:
+                raise ValueError(
+                    f"hosts disagree on reduction mode for {wname!r}: "
+                    f"{m['reduction']} vs {w['reduction']} — per-class "
+                    f"reduction config must be cluster-uniform")
+            m["batches"] += w["batches"]
+            m["requests"] += w["requests"]
+            m["folds"] += w["folds"]
+            m["_k_sum"] += w["k_occupancy_mean"] * w["batches"]
+            m["_m_sum"] += w["m_occupancy_mean"] * w["batches"]
+    for m in out.values():
+        b = m["batches"] or 1
+        m["k_occupancy_mean"] = m.pop("_k_sum") / b
+        m["m_occupancy_mean"] = m.pop("_m_sum") / b
+    return out
+
+
+def _merge_reduction_stalls(snaps: list[dict]) -> dict:
+    out = {"eager_folds": 0, "deferred_folds": 0, "by_close_reason": {}}
+    for snap in snaps:
+        stalls = snap.get("reduction_stalls")
+        if not stalls:
+            continue
+        out["eager_folds"] += stalls["eager_folds"]
+        out["deferred_folds"] += stalls["deferred_folds"]
+        for reason, by in stalls["by_close_reason"].items():
+            slot = out["by_close_reason"].setdefault(
+                reason, {"eager_folds": 0, "deferred_folds": 0})
+            slot["eager_folds"] += by["eager_folds"]
+            slot["deferred_folds"] += by["deferred_folds"]
+    return out
+
+
+def load_imbalance(per_host_requests: list[int]) -> dict:
+    """Fleet skew metrics over per-host served-request counts."""
+    n = len(per_host_requests)
+    mean = sum(per_host_requests) / n if n else 0.0
+    if mean == 0.0:
+        return {"per_host_requests": list(per_host_requests),
+                "max_over_mean": 1.0, "cv": 0.0}
+    var = sum((r - mean) ** 2 for r in per_host_requests) / n
+    return {
+        "per_host_requests": list(per_host_requests),
+        "max_over_mean": max(per_host_requests) / mean,
+        "cv": math.sqrt(var) / mean,
+    }
+
+
+def merge_snapshots(snaps: list[dict]) -> dict:
+    """Merge K per-host telemetry snapshots into one cluster snapshot.
+
+    The merged document has the same schema as a single-host snapshot (so
+    downstream BENCH_* tooling needs no cluster special-case) plus
+    ``latency.merged_exact`` / ``queue_wait.merged_exact`` flags and a
+    ``load_imbalance`` section.
+    """
+    if not snaps:
+        raise ValueError("merge_snapshots needs at least one host snapshot")
+    batches = [s["batches"] for s in snaps]
+    admission_by = _merge_counter_dicts(s["admission"]["by_reason"]
+                                        for s in snaps)
+    merged = {
+        "batches": sum(batches),
+        "requests_served": sum(s["requests_served"] for s in snaps),
+        "k_occupancy_mean": _weighted_mean(
+            [(s["k_occupancy_mean"], b) for s, b in zip(snaps, batches)]),
+        "m_occupancy_mean": _weighted_mean(
+            [(s["m_occupancy_mean"], b) for s, b in zip(snaps, batches)]),
+        "queue_depth_mean": _weighted_mean(
+            [(s["queue_depth_mean"], b) for s, b in zip(snaps, batches)]),
+        "queue_depth_max": max(s["queue_depth_max"] for s in snaps),
+        "service_s_total": sum(s["service_s_total"] for s in snaps),
+        "close_reasons": _merge_counter_dicts(s["close_reasons"]
+                                              for s in snaps),
+        "reduction_stalls": _merge_reduction_stalls(snaps),
+        "per_workload": _merge_per_workload(snaps),
+        "latency": _merge_histograms([s["latency"] for s in snaps]),
+        "queue_wait": _merge_histograms([s["queue_wait"] for s in snaps]),
+        "admission": {
+            "admitted": sum(s["admission"]["admitted"] for s in snaps),
+            "rejected": sum(s["admission"]["rejected"] for s in snaps),
+            "by_reason": admission_by,
+        },
+        "load_imbalance": load_imbalance(
+            [s["requests_served"] for s in snaps]),
+        "n_hosts": len(snaps),
+    }
+    return merged

@@ -121,6 +121,50 @@ def serve_crypto_online(*, duration_s=0.05, rate_hz=2048, n_c=8,
     return load, snap, dt
 
 
+def serve_crypto_cluster(*, hosts=2, duration_s=0.05, rate_hz=2048, n_c=8,
+                         max_age_s=0.005, d_uniform=None, seed=0,
+                         validate=True, accum="fp32_mantissa",
+                         reduction="eager", reduction_by_workload=None,
+                         kappa=None, d_tile=None, max_pending=1024,
+                         tenant_rate_hz=None, slo_deadline_s=None,
+                         occupancy_close=None, gossip_period_s=0.002,
+                         gossip_staleness_factor=2.0, pinned=None,
+                         warm_start=None, telemetry_out=None, trace=None,
+                         realtime=False, coscheduler_factory=None):
+    """Closed loop over an N-host sharded cluster: tenant-hash ingress →
+    per-host admission (gossip-informed SLO gate) → per-host continuous
+    batcher → co-scheduled dispatch → two-phase drain barrier → merged
+    telemetry.  ``trace`` overrides the Poisson trace (benchmarks pass
+    skewed tenant distributions)."""
+    from repro.cluster import ClusterConfig, ClusterServer
+    from repro.core.scheduler import PoissonTrace
+    from repro.serve import LoadGenerator, ServeConfig
+
+    serve_cfg = ServeConfig(
+        n_c=n_c, max_age_s=max_age_s, validate=validate, accum=accum,
+        max_pending=max_pending, reduction=reduction,
+        reduction_by_workload=reduction_by_workload, kappa=kappa,
+        d_tile=d_tile, tenant_rate_hz=tenant_rate_hz,
+        slo_deadline_s=slo_deadline_s, occupancy_close=occupancy_close,
+        warm_start=warm_start)
+    cluster = ClusterServer(
+        ClusterConfig(n_hosts=hosts, gossip_period_s=gossip_period_s,
+                      gossip_staleness_factor=gossip_staleness_factor,
+                      pinned=pinned, serve=serve_cfg),
+        coscheduler_factory=coscheduler_factory)
+    gen = LoadGenerator(
+        trace if trace is not None else
+        PoissonTrace(rate_hz=rate_hz, duration_s=duration_s,
+                     uniform_degree=d_uniform, seed=seed),
+        seed=seed, accum=accum)
+    t0 = time.time()
+    load = gen.run(cluster, realtime=realtime)
+    dt = time.time() - t0
+    snap = (cluster.write_json(telemetry_out) if telemetry_out
+            else cluster.snapshot())
+    return load, snap, dt
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=["crypto", "crypto-online", "lm"],
@@ -132,6 +176,12 @@ def main():
     ap.add_argument("--rate", type=float, default=2048)
     ap.add_argument("--n-c", type=int, default=8)
     ap.add_argument("--max-age-ms", type=float, default=5.0)
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="shard crypto-online serving across N simulated "
+                         "host slices (tenant-hash ingress + gossip + "
+                         "distributed drain barrier)")
+    ap.add_argument("--gossip-period-ms", type=float, default=2.0,
+                    help="queue-depth digest exchange period (cluster mode)")
     ap.add_argument("--tenant-rate", type=float, default=None,
                     help="per-tenant token-bucket rate (req/s)")
     ap.add_argument("--slo-ms", type=float, default=None,
@@ -167,6 +217,43 @@ def main():
         cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
         toks, dt = serve_lm(cfg, decode_steps=args.decode_steps)
         print(f"decoded {toks.shape} tokens in {dt:.2f}s")
+    elif args.mode == "crypto-online" and args.hosts > 1:
+        load, snap, dt = serve_crypto_cluster(
+            hosts=args.hosts, duration_s=args.duration, rate_hz=args.rate,
+            n_c=args.n_c, max_age_s=args.max_age_ms / 1e3,
+            tenant_rate_hz=args.tenant_rate,
+            slo_deadline_s=None if args.slo_ms is None else args.slo_ms / 1e3,
+            accum=args.accum, reduction=args.reduction,
+            reduction_by_workload=reduction_by_workload,
+            kappa=args.kappa, d_tile=args.d_tile,
+            gossip_period_s=args.gossip_period_ms / 1e3,
+            telemetry_out=args.telemetry_out, realtime=args.realtime)
+        m = snap["merged"]
+        served = sum(1 for h in load.handles if h.done() and not h.rejected)
+        print(f"cluster[{args.hosts} hosts]: served {served}/"
+              f"{len(load.handles)} requests ({len(load.rejected)} rejected) "
+              f"in {dt:.2f}s wall, {m['batches']} batches "
+              f"[{', '.join(f'{k}:{v}' for k, v in m['close_reasons'].items())}]")
+        imb = m["load_imbalance"]
+        print(f"per-host requests {imb['per_host_requests']} "
+              f"(max/mean {imb['max_over_mean']:.2f}, cv {imb['cv']:.2f}); "
+              f"occupancy K={m['k_occupancy_mean']:.3f} "
+              f"M={m['m_occupancy_mean']:.3f}")
+        g = snap["gossip"]
+        print(f"gossip: {g['publishes']} publishes, {g['views']} views, "
+              f"{g['stale_drops']} stale drops, "
+              f"used staleness max {g['used_staleness_max_s']*1e3:.2f}ms "
+              f"(bound {g['staleness_bound_s']*1e3:.2f}ms)")
+        lat = m["latency"]
+        print(f"latency (merged, exact={lat['merged_exact']}): "
+              f"p50={lat['p50_s']*1e3:.2f}ms p95={lat['p95_s']*1e3:.2f}ms "
+              f"p99={lat['p99_s']*1e3:.2f}ms")
+        bar = snap["drain_barrier"]
+        print(f"drain barrier: {bar['hosts']} hosts quiesced → "
+              f"{bar['batches_flushed']} batches flushed, "
+              f"complete={bar['complete']}")
+        if args.telemetry_out:
+            print(f"cluster telemetry JSON → {args.telemetry_out}")
     elif args.mode == "crypto-online":
         load, snap, dt = serve_crypto_online(
             duration_s=args.duration, rate_hz=args.rate, n_c=args.n_c,

@@ -43,7 +43,8 @@ class TokenBucket:
 @dataclasses.dataclass(frozen=True)
 class AdmissionDecision:
     admitted: bool
-    reason: str              # "ok" | "queue_full" | "rate_limited" | "slo_miss"
+    reason: str              # "ok" | "queue_full" | "rate_limited" |
+                             # "slo_miss" | "cluster_slo_miss"
     retry_after_s: float = 0.0
 
 
@@ -91,7 +92,13 @@ class AdmissionController:
         before hard rejections begin."""
         return pending >= high_watermark * self.max_pending
 
-    def admit(self, req, now: float, pending: int) -> AdmissionDecision:
+    def admit(self, req, now: float, pending: int,
+              cluster_pending: float | None = None) -> AdmissionDecision:
+        """``cluster_pending`` is the per-host-equivalent cluster queue depth
+        (cluster total / live hosts) from the gossip layer; ``None`` means no
+        cluster view and the SLO gate falls back to local state only.  The
+        cluster check runs after the local one so ``cluster_slo_miss`` always
+        means a rejection local-only state would have admitted."""
         if pending >= self.max_pending:
             return AdmissionDecision(False, "queue_full",
                                      retry_after_s=self.estimated_wait_s(pending))
@@ -99,6 +106,11 @@ class AdmissionController:
             wait = self.estimated_wait_s(pending)
             if wait > self.slo_deadline_s:
                 return AdmissionDecision(False, "slo_miss", retry_after_s=wait)
+            if cluster_pending is not None and cluster_pending > pending:
+                cwait = self.estimated_wait_s(cluster_pending)
+                if cwait > self.slo_deadline_s:
+                    return AdmissionDecision(False, "cluster_slo_miss",
+                                             retry_after_s=cwait)
         if self.tenant_rate_hz is not None:
             bucket = self._buckets.get(req.tenant_id)
             if bucket is None:

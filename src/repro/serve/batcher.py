@@ -68,6 +68,11 @@ class ContinuousBatcher:
         """Pending (accepted, not yet dispatched) request count."""
         return self._depth
 
+    @property
+    def open_batches(self) -> int:
+        """Open (workload, bucket) classes awaiting a close trigger."""
+        return len(self._open)
+
     def oldest_age(self, now: float) -> float:
         if not self._open:
             return 0.0

@@ -116,6 +116,11 @@ class ServeConfig:
     reduction_by_workload: dict | None = None
     kappa: int | None = None
     d_tile: int | None = None
+    # warm start: (workload, d_bucket) pairs to trace + compile at boot so the
+    # first dispatch of each listed program triggers zero new XLA traces
+    # (shapes are N_c-row operands; requires pad_rows so live batches reuse
+    # them).  None skips warm start.
+    warm_start: list | None = None
 
 
 class CryptoServer:
@@ -141,6 +146,19 @@ class CryptoServer:
         self._handles: dict[int, ResponseHandle] = {}
         self._validated: set[tuple] = set()
         self._draining = False
+        # Cluster hook: when set (by repro.cluster), called as fn(now) and
+        # must return the per-host-equivalent cluster queue depth (or None
+        # when no sufficiently fresh gossip digest exists).  The SLO gate
+        # then operates on bounded-staleness *cluster* state.
+        self.cluster_depth_fn = None
+        self.warm_traces = 0
+        if cfg.warm_start:
+            if not cfg.pad_rows:
+                raise ValueError(
+                    "warm_start requires pad_rows: unpadded batches stack "
+                    "row-count-dependent operand shapes, so pre-compiled "
+                    "N_c-row programs would never be reused")
+            self.warm_traces = self.cos.precompile(cfg.warm_start, cfg.n_c)
 
     # --- ingress --------------------------------------------------------------
 
@@ -152,7 +170,16 @@ class CryptoServer:
         elif id(req) in self._handles:
             decision = AdmissionDecision(False, "duplicate")
         else:
-            decision = self.admission.admit(req, now, pending=self.batcher.depth)
+            # Only consult gossip when the SLO gate can act on it — the view
+            # merge is O(n_hosts) per submission, and reading digests no
+            # decision consumes would pollute the gossip staleness audit.
+            cluster_pending = (
+                self.cluster_depth_fn(now)
+                if (self.cluster_depth_fn is not None
+                    and self.admission.slo_deadline_s is not None) else None)
+            decision = self.admission.admit(req, now,
+                                            pending=self.batcher.depth,
+                                            cluster_pending=cluster_pending)
         self.telemetry.record_admission(decision.reason)
         if not decision.admitted:
             handle._reject(decision, at=now)
@@ -179,10 +206,23 @@ class CryptoServer:
         """When pump() next has work — live loops sleep until this instant."""
         return self.batcher.next_deadline()
 
-    def drain(self, now: float | None = None) -> int:
-        """Graceful shutdown: stop admitting, flush everything in flight."""
-        now = time.monotonic() if now is None else now
+    def quiesce(self, now: float | None = None):
+        """Drain phase 1: stop admitting, keep in-flight rows queued.
+
+        The cluster drain barrier quiesces *every* host before flushing *any*
+        host, so no request can be admitted onto an already-drained peer
+        mid-barrier — the two-phase split is what makes a cluster drain
+        bit-for-bit equivalent to a single-host replay of the same trace."""
+        del now  # admission stop is instantaneous; kept for clock symmetry
         self._draining = True
+
+    def drain(self, now: float | None = None) -> int:
+        """Graceful shutdown: stop admitting, flush everything in flight.
+
+        Single-host callers use this directly (quiesce + flush in one step);
+        the cluster barrier calls ``quiesce`` on all hosts first, then this."""
+        now = time.monotonic() if now is None else now
+        self.quiesce(now)
         closed = self.batcher.flush(now)
         self._dispatch(closed, now)
         return len(closed)

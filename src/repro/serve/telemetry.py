@@ -45,9 +45,17 @@ class LatencyHistogram:
         frac = pos - lo
         return s[lo] * (1 - frac) + s[hi] * frac
 
-    def summary(self) -> dict:
+    @property
+    def samples(self) -> list[float]:
+        """Sorted copy of the raw samples (the mergeable representation)."""
+        if not self._sorted:
+            self._samples.sort()
+            self._sorted = True
+        return list(self._samples)
+
+    def summary(self, include_samples: bool = False) -> dict:
         n = len(self._samples)
-        return {
+        out = {
             "count": n,
             "mean_s": (sum(self._samples) / n) if n else 0.0,
             "p50_s": self.percentile(50),
@@ -55,6 +63,12 @@ class LatencyHistogram:
             "p99_s": self.percentile(99),
             "max_s": self.percentile(100),
         }
+        if include_samples:
+            # Cluster mode: per-host snapshots carry the raw samples so the
+            # merged cluster quantiles are exact (quantiles of summaries are
+            # not mergeable; quantiles of concatenated samples are).
+            out["samples"] = self.samples
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,7 +116,7 @@ class Telemetry:
 
     # --- export ---------------------------------------------------------------
 
-    def snapshot(self) -> dict:
+    def snapshot(self, include_samples: bool = False) -> dict:
         n_b = len(self.batches)
         per_workload: dict[str, dict] = {}
         for rec in self.batches:
@@ -147,8 +161,8 @@ class Telemetry:
             "close_reasons": reasons,
             "reduction_stalls": stalls,
             "per_workload": per_workload,
-            "latency": self.latency.summary(),
-            "queue_wait": self.queue_wait.summary(),
+            "latency": self.latency.summary(include_samples),
+            "queue_wait": self.queue_wait.summary(include_samples),
             "admission": {"admitted": admitted, "rejected": rejected,
                           "by_reason": dict(self.admission_counts)},
         }

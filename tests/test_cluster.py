@@ -1,0 +1,341 @@
+"""Multi-host sharded serving: routing, gossip, drain barrier, parity, merge.
+
+Everything here runs on the deterministic virtual clock — host counts,
+gossip staleness scenarios, and drain barriers are all exercised on one
+machine with no wall-clock sensitivity.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterConfig, ClusterServer, GossipBus,
+                           TenantHashRouter, load_imbalance, merge_snapshots,
+                           stable_tenant_hash)
+from repro.core import field as F
+from repro.core.scheduler import TenantRequest
+from repro.core.scheduler.coscheduler import SliceCoScheduler
+from repro.launch.serve import serve_crypto, serve_crypto_cluster
+from repro.serve import CryptoServer, ServeConfig
+from repro.serve.telemetry import BatchRecord, Telemetry
+
+RNG = np.random.default_rng(17)
+
+# One co-scheduler shared by every host of every cluster in this module (and
+# by the offline replays): per-(workload, d_bucket) compiled programs are
+# exactly what hosts reuse, and sharing keeps the suite from recompiling the
+# mixed eager/lazy engine set once per host count.
+LAZY_COS = SliceCoScheduler(accum="int32_native", d_tile=171,
+                            reduction_by_workload={"dilithium": "lazy"})
+PLAIN_COS = SliceCoScheduler()
+
+
+def _dil_request(tid, d, t=0.0):
+    coeffs = np.asarray(RNG.integers(0, F.DILITHIUM_Q, d, dtype=np.uint64),
+                        np.uint32)
+    return TenantRequest(tid, "dilithium", d, t, coeffs)
+
+
+def _tenant_on_host(router, host, start=0):
+    tid = start
+    while router.host_for(tid) != host:
+        tid += 1
+    return tid
+
+
+# --- ingress router ------------------------------------------------------------
+
+def test_router_stable_and_pinned():
+    r = TenantHashRouter(4, pinned={7: 2})
+    # process-independent: CRC32, not salted hash()
+    assert stable_tenant_hash(123) == 0x884863D2           # crc32(b"123")
+    assert stable_tenant_hash("123") == stable_tenant_hash(123)
+    assert all(r.host_for(t) == r.host_for(t) for t in range(100))
+    assert r.host_for(7) == 2                       # pin overrides the hash
+    parts = r.partition(range(1000))
+    assert sorted(sum(parts.values(), [])) == list(range(1000))
+    assert all(len(v) > 150 for v in parts.values())   # near-uniform spread
+    with pytest.raises(ValueError):
+        TenantHashRouter(2, pinned={0: 5})
+    with pytest.raises(ValueError):
+        TenantHashRouter(0)
+
+
+def test_cluster_routes_by_tenant_hash_and_pinning():
+    cfg = ClusterConfig(n_hosts=3, pinned={99: 1},
+                        serve=ServeConfig(n_c=64, max_age_s=10.0,
+                                          validate=False))
+    cluster = ClusterServer(cfg, coscheduler_factory=lambda h: PLAIN_COS)
+    for tid in (0, 1, 2, 3, 99):
+        cluster.submit(_dil_request(tid, 64), now=0.0)
+    expect = [0, 0, 0]
+    for tid in (0, 1, 2, 3):
+        expect[cluster.router.host_for(tid)] += 1
+    expect[1] += 1                                   # the pinned tenant
+    assert [h.batcher.depth for h in cluster.hosts] == expect
+    assert cluster.snapshot()["routing"]["per_host_submissions"] == expect
+
+
+# --- gossip --------------------------------------------------------------------
+
+def test_gossip_period_gating_and_staleness_bound():
+    g = GossipBus(2, period_s=0.01, staleness_factor=2.0)
+    assert g.staleness_bound_s == pytest.approx(0.02)
+    assert g.maybe_publish(1, 10, now=0.0)
+    assert not g.maybe_publish(1, 20, now=0.005)     # inside the period
+    assert g.maybe_publish(1, 20, now=0.01)
+    # fresh digest is used and its staleness recorded
+    v = g.cluster_view(0, local_depth=3, now=0.025)
+    assert v.peer_depth == 20 and v.contributing_hosts == 2
+    assert v.max_staleness_s == pytest.approx(0.015)
+    assert v.total_depth == 23 and v.per_host_equiv == pytest.approx(11.5)
+    # past the bound the digest is dropped, never consumed
+    v2 = g.cluster_view(0, local_depth=3, now=0.031)
+    assert v2.peer_depth == 0 and v2.stale_dropped == 1
+    assert v2.per_host_equiv == pytest.approx(3.0)
+    snap = g.snapshot()
+    assert snap["stale_drops"] == 1
+    assert snap["used_staleness_max_s"] <= snap["staleness_bound_s"]
+
+
+def test_gossip_gated_admission_rejects_on_cluster_depth():
+    """Acceptance: the SLO gate rejects on cluster-wide depth that
+    local-only state would admit, and never consumes a digest older than
+    period × 2."""
+    period = 0.01
+    cfg = ClusterConfig(
+        n_hosts=2, gossip_period_s=period,
+        serve=ServeConfig(n_c=64, max_age_s=10.0, validate=False,
+                          slo_deadline_s=0.1))
+    cluster = ClusterServer(cfg, coscheduler_factory=lambda h: PLAIN_COS)
+    for srv in cluster.hosts:
+        srv.admission.service_rate = 100.0           # pin the EWMA: 100 ops/s
+        srv.admission.ewma_alpha = 0.0
+    # host 1 is the victim we overload; its *local* SLO gate would reject the
+    # pile-up itself, so disable it there — the point is host 0's gate acting
+    # on gossiped cluster state.
+    cluster.hosts[1].admission.slo_deadline_s = None
+    t_cold = _tenant_on_host(cluster.router, 0)
+    # pile 30 pending rows onto host 1 (nothing dispatches: n_c=64, age=10s)
+    tid = 0
+    for _ in range(30):
+        tid = _tenant_on_host(cluster.router, 1, start=tid)
+        h = cluster.submit(_dil_request(tid, 64), now=0.0)
+        assert not h.rejected
+        tid += 1
+    assert cluster.hosts[1].batcher.depth == 30
+
+    # t=0.02: the tick publishes host 1's depth, then host 0 sees cluster
+    # state: local 0 (wait 0s — local-only admits), cluster 30/2 = 15 rows
+    # → 0.15s predicted wait > 0.1s SLO → cluster rejection.
+    h = cluster.submit(_dil_request(t_cold, 64), now=0.02)
+    assert h.rejected and h.decision.reason == "cluster_slo_miss"
+    assert h.decision.retry_after_s == pytest.approx(0.15)
+    # local-only state would have admitted this request
+    local = cluster.hosts[0].admission.admit(
+        _dil_request(t_cold + 10, 64), 0.02,
+        pending=cluster.hosts[0].batcher.depth)
+    assert local.admitted
+
+    # digest aged inside the bound (period < age ≤ 2×period) is still used:
+    # submit directly to host 0 so no tick refreshes host 1's digest
+    h2 = cluster.hosts[0].submit(_dil_request(t_cold + 20, 64), now=0.035)
+    assert h2.rejected and h2.decision.reason == "cluster_slo_miss"
+    # digest aged past the bound is dropped — local-only state decides,
+    # which admits (a quiet host's stale depth must not gate admission)
+    h3 = cluster.hosts[0].submit(_dil_request(t_cold + 30, 64), now=0.045)
+    assert not h3.rejected
+    g = cluster.snapshot()["gossip"]
+    assert g["stale_drops"] >= 1
+    assert g["used_staleness_max_s"] == pytest.approx(0.015)
+    assert g["used_staleness_max_s"] <= g["staleness_bound_s"]
+    by = cluster.hosts[0].telemetry.snapshot()["admission"]["by_reason"]
+    assert by["cluster_slo_miss"] == 2
+
+
+# --- distributed drain barrier -------------------------------------------------
+
+def test_drain_barrier_quiesces_fleet_then_flushes():
+    cfg = ClusterConfig(n_hosts=3,
+                        serve=ServeConfig(n_c=64, max_age_s=10.0,
+                                          validate=False))
+    cluster = ClusterServer(cfg, coscheduler_factory=lambda h: PLAIN_COS)
+    handles = []
+    for host in range(3):
+        tid = _tenant_on_host(cluster.router, host)
+        handles.append(cluster.submit(_dil_request(tid, 64), now=0.0))
+    assert not cluster.drained
+    flushed = cluster.drain(0.001)
+    assert flushed == 3 and cluster.drained
+    assert all(h.done() and not h.rejected for h in handles)
+    # post-barrier ingress is rejected on *every* host, not just one
+    for host in range(3):
+        tid = _tenant_on_host(cluster.router, host, start=1000)
+        h = cluster.submit(_dil_request(tid, 64), now=0.002)
+        assert h.rejected and h.decision.reason == "draining"
+    bar = cluster.snapshot()["drain_barrier"]
+    assert bar["complete"] and bar["hosts"] == 3
+    assert bar["batches_flushed"] == 3
+    assert bar["quiesced_at"] <= bar["drained_at"]
+
+
+# --- cluster vs single-host parity ---------------------------------------------
+
+@pytest.mark.parametrize("n_hosts", [1, 2, 4])
+def test_cluster_drain_matches_single_host_replay(n_hosts):
+    """Acceptance: draining an N-host cluster yields bit-for-bit identical
+    per-tenant results to the single-host offline replay of the same trace,
+    with mixed eager/lazy reduction classes."""
+    kw = dict(duration_s=0.01, rate_hz=1024, seed=5, d_uniform=256,
+              accum="int32_native", validate=False)
+    offline_results, n_ops, _ = serve_crypto(coscheduler=LAZY_COS, **kw)
+    offline = {}
+    for res in offline_results:
+        offline.update(res.outputs)
+
+    load, snap, _ = serve_crypto_cluster(
+        hosts=n_hosts, n_c=8, max_age_s=0.002, d_tile=171,
+        reduction_by_workload={"dilithium": "lazy"},
+        coscheduler_factory=lambda h: LAZY_COS, **kw)
+    assert set(load.outputs) == set(offline) and n_ops == len(offline)
+    for tid, row in offline.items():
+        np.testing.assert_array_equal(load.outputs[tid], row)
+    m = snap["merged"]
+    assert m["requests_served"] == n_ops
+    assert set(m["per_workload"]) == {"dilithium", "bn254"}
+    assert m["per_workload"]["dilithium"]["reduction"] == "lazy"
+    assert m["per_workload"]["bn254"]["reduction"] == "eager"
+    assert snap["n_hosts"] == n_hosts and len(snap["per_host"]) == n_hosts
+    assert snap["drain_barrier"]["complete"]
+    if n_hosts > 1:
+        # the trace actually spread across hosts (hash ingress works)
+        assert sum(1 for s in snap["per_host"]
+                   if s["requests_served"] > 0) > 1
+
+
+# --- warm-start compile cache --------------------------------------------------
+
+def test_warm_start_first_dispatch_triggers_zero_new_traces():
+    cos = SliceCoScheduler()
+    programs = [("dilithium", 64), ("dilithium", 128)]
+    server = CryptoServer(
+        ServeConfig(n_c=4, max_age_s=10.0, validate=False,
+                    warm_start=programs),
+        coscheduler=cos)
+    assert server.warm_traces == 2
+    assert all(cos.trace_counts[key] == 1 for key in programs)
+    reqs = [_dil_request(i, d) for i, d in enumerate((64, 60, 100, 128))]
+    handles = [server.submit(r, now=0.0) for r in reqs]
+    server.drain(0.001)
+    # first live dispatch of both warmed programs: zero new XLA traces
+    assert all(cos.trace_counts[key] == 1 for key in programs)
+    from repro.core import workloads as WK
+    for r, h in zip(reqs, handles):
+        d = server.batcher.bucket_for(r.degree)
+        iso = np.zeros((1, d), np.uint32)
+        iso[0, : r.degree] = r.coeffs
+        np.testing.assert_array_equal(h.result(),
+                                      WK.DilithiumEngine(d).oracle_np(iso)[0])
+    # without row padding the warmed shapes could never be reused — reject
+    with pytest.raises(ValueError, match="pad_rows"):
+        CryptoServer(ServeConfig(pad_rows=False, warm_start=programs),
+                     coscheduler=cos)
+
+
+# --- telemetry merge -----------------------------------------------------------
+
+def _random_telemetry(rng, n_batches, reason_pool=("full", "age", "drain")):
+    t = Telemetry()
+    for _ in range(n_batches):
+        workload = rng.choice(["dilithium", "bn254"])
+        lazy = workload == "dilithium"
+        t.record_batch(BatchRecord(
+            workload=str(workload), d_bucket=int(rng.choice([64, 256])),
+            n_c=int(rng.integers(1, 9)),
+            close_reason=str(rng.choice(reason_pool)),
+            m_occupancy=float(rng.uniform(0, 1)),
+            k_occupancy=float(rng.uniform(0, 1)),
+            queue_depth=int(rng.integers(0, 50)),
+            service_s=float(rng.uniform(0, 1e-2)),
+            age_s=float(rng.uniform(0, 1e-2)),
+            reduction="lazy" if lazy else "eager",
+            n_folds=1 if lazy else 9))
+        t.record_admission(str(rng.choice(["ok", "ok", "queue_full"])))
+    for _ in range(4 * n_batches):
+        t.observe_latency(float(rng.uniform(0, 0.1)),
+                          queue_wait_s=float(rng.uniform(0, 0.05)))
+    return t
+
+
+def test_merge_snapshots_matches_concatenated_records():
+    """Satellite acceptance: merging K per-host snapshots reproduces the
+    quantiles/counters of the concatenated batch records within the
+    documented tolerance (exact samples path: 1e-9 relative)."""
+    rng = np.random.default_rng(23)
+    parts = [_random_telemetry(rng, n) for n in (7, 13, 5)]
+    combined = Telemetry()
+    for t in parts:
+        for rec in t.batches:
+            combined.record_batch(rec)
+        for reason, n in t.admission_counts.items():
+            for _ in range(n):
+                combined.record_admission(reason)
+        for lat, qw in zip(t.latency.samples, t.queue_wait.samples):
+            combined.observe_latency(lat, queue_wait_s=qw)
+    merged = merge_snapshots([t.snapshot(include_samples=True)
+                              for t in parts])
+    want = combined.snapshot()
+    rel = 1e-9
+    for key in ("batches", "requests_served", "queue_depth_max"):
+        assert merged[key] == want[key], key
+    for key in ("k_occupancy_mean", "m_occupancy_mean", "queue_depth_mean",
+                "service_s_total"):
+        assert merged[key] == pytest.approx(want[key], rel=rel), key
+    assert merged["close_reasons"] == want["close_reasons"]
+    assert merged["reduction_stalls"] == want["reduction_stalls"]
+    assert merged["admission"] == want["admission"]
+    for w, stats in want["per_workload"].items():
+        got = merged["per_workload"][w]
+        for k, v in stats.items():
+            if isinstance(v, float):
+                assert got[k] == pytest.approx(v, rel=rel), (w, k)
+            else:
+                assert got[k] == v, (w, k)
+    for hist in ("latency", "queue_wait"):
+        assert merged[hist]["merged_exact"] is True
+        for q in ("count", "mean_s", "p50_s", "p95_s", "p99_s", "max_s"):
+            assert merged[hist][q] == pytest.approx(want[hist][q], rel=rel), \
+                (hist, q)
+    imb = merged["load_imbalance"]
+    assert imb["per_host_requests"] == [t.snapshot()["requests_served"]
+                                        for t in parts]
+    assert imb["max_over_mean"] >= 1.0
+
+
+def test_merge_without_samples_is_flagged_approximate():
+    rng = np.random.default_rng(29)
+    parts = [_random_telemetry(rng, 4) for _ in range(2)]
+    merged = merge_snapshots([t.snapshot() for t in parts])   # no samples
+    assert merged["latency"]["merged_exact"] is False
+    # max of maxes stays exact even on the approximate path
+    assert merged["latency"]["max_s"] == pytest.approx(
+        max(t.latency.percentile(100) for t in parts))
+    assert merged["latency"]["count"] == sum(len(t.latency) for t in parts)
+
+
+def test_merge_rejects_cross_host_reduction_disagreement():
+    a, b = Telemetry(), Telemetry()
+    rec = dict(workload="dilithium", d_bucket=64, n_c=1, close_reason="full",
+               m_occupancy=0.5, k_occupancy=0.5, queue_depth=0,
+               service_s=1e-3, age_s=1e-3)
+    a.record_batch(BatchRecord(reduction="lazy", n_folds=1, **rec))
+    b.record_batch(BatchRecord(reduction="eager", n_folds=9, **rec))
+    with pytest.raises(ValueError, match="cluster-uniform"):
+        merge_snapshots([a.snapshot(), b.snapshot()])
+
+
+def test_load_imbalance_metrics():
+    even = load_imbalance([10, 10, 10])
+    assert even["max_over_mean"] == pytest.approx(1.0)
+    assert even["cv"] == pytest.approx(0.0)
+    hot = load_imbalance([30, 0, 0])
+    assert hot["max_over_mean"] == pytest.approx(3.0)
+    assert load_imbalance([0, 0])["max_over_mean"] == 1.0
