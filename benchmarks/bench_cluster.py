@@ -69,6 +69,9 @@ def sweep(rates=RATE_LADDER_FAST, hosts=HOST_LADDER, dists=DISTRIBUTIONS, *,
                     "close_reasons": m["close_reasons"],
                     "k_occupancy_mean": m["k_occupancy_mean"],
                     "m_occupancy_mean": m["m_occupancy_mean"],
+                    "dispatches": m["dispatch"]["dispatches"],
+                    "merged_dispatches": m["dispatch"]["merged_dispatches"],
+                    "dispatch_m_fill_mean": m["dispatch"]["m_fill_mean"],
                     "queue_depth_max": m["queue_depth_max"],
                     "p50_s": m["latency"]["p50_s"],
                     "p95_s": m["latency"]["p95_s"],
@@ -117,6 +120,8 @@ def dry_run() -> dict:
     for pt in points:
         assert pt["served"] > 0 and pt["rejected"] == 0, pt
         assert pt["drain_barrier"]["complete"], pt
+        assert pt["dispatches"] > 0, pt
+        assert 0.0 < pt["dispatch_m_fill_mean"] <= 1.0, pt
         g = pt["gossip"]
         assert g["used_staleness_max_s"] <= g["staleness_bound_s"], g
     hot = next(pt for pt in points if pt["tenant_dist"] == "hot")
@@ -156,7 +161,8 @@ def main():
                    max_age_s=args.max_age_ms / 1e3, d_uniform=args.d_uniform,
                    n_tenants=args.n_tenants,
                    gossip_period_s=args.gossip_period_ms / 1e3)
-    doc = {"bench": "cluster", "points": points}
+    from benchmarks.common import perf_record
+    doc = perf_record("cluster", points)
     text = json.dumps(doc, indent=2, sort_keys=True)
     if args.out:
         with open(args.out, "w") as f:

@@ -1,0 +1,237 @@
+"""BENCH_dispatch — dispatch hot-path microbenchmark (fast-path levers).
+
+Measures the Tier-2 dispatch loop itself — the per-launch overhead the
+paper's measurement vehicle adds on top of the architectural deficit — over
+a grid of fast-path configurations:
+
+* **per-batch** (the pre-fast-path baseline): every stacked batch is its own
+  launch, padded to N_c rows, materialised with a blocking host sync before
+  the next launch;
+* **merge** on/off — M-axis super-batching of same-(workload, d_bucket)
+  batches into tall operands;
+* **ladder** on/off — row-ladder compile cache (launch heights padded to
+  geometric rungs, so XLA traces are bounded by the ladder size);
+* **donate** on/off — operand buffers donated to the e2e programs;
+* **async** on/off — two-phase launch → copy_to_host_async → gather with one
+  launch group kept in flight.
+
+Every configuration is checked **bit-for-bit against the per-batch baseline**
+before its timing counts, and the trace counters are asserted against the
+ladder bound — throughput claims at unequal correctness are worthless.
+Writes a ``BENCH_dispatch.json`` perf record via the shared helper in
+:mod:`benchmarks.common`.
+
+  PYTHONPATH=src python benchmarks/bench_dispatch.py [--batches 200]
+      [--repeats 3] [--out BENCH_dispatch.json] [--dry-run]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+# repo root, cwd-independent (benchmarks/ run as a script)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import write_perf_record  # noqa: E402
+
+LADDER = (8, 16, 32, 64, 128)
+N_C = 8          # baseline pad target (the serve default)
+
+
+def make_batches(n_batches: int, *, seed: int = 0, d_buckets=(64, 128),
+                 with_bn254: bool = False) -> list:
+    """Adversarially mixed-height stacked batches: every height in
+    [1, N_C] appears, in an order that defeats shape caching without a
+    ladder.  Live rows only (mergeable emission)."""
+    from repro.core import field as F
+    from repro.core.scheduler import TenantRequest
+    from repro.core.scheduler.rectangular import StackedBatch, stack_rows
+    from repro.core import workloads as WK
+
+    rng = np.random.default_rng(seed)
+    batches = []
+    for i in range(n_batches):
+        workload = ("bn254" if (with_bn254 and i % 5 == 4) else "dilithium")
+        d = int(rng.choice(d_buckets)) if workload == "dilithium" else 64
+        rows = int(rng.integers(1, N_C + 1))
+        reqs = []
+        for r in range(rows):
+            tid = i * 1000 + r
+            if workload == "dilithium":
+                coeffs = np.asarray(rng.integers(0, F.DILITHIUM_Q, d,
+                                                 dtype=np.uint64), np.uint32)
+            else:
+                eng = WK.make_engine("bn254", d)
+                vals = np.array([int(x) for x in rng.integers(0, 2**31, d)],
+                                object)
+                coeffs = np.asarray(eng.ingest(vals))
+            reqs.append(TenantRequest(tid, workload, d, 0.0, coeffs))
+        batches.append(StackedBatch(workload=workload, d_bucket=d,
+                                    requests=reqs,
+                                    operand=stack_rows(reqs, d)))
+    return batches
+
+
+def _pad_batch(b, n_rows: int):
+    """The pre-fast-path batcher behaviour: pad every operand to N_c rows so
+    the per-batch path hits one compiled shape per class."""
+    from repro.core.scheduler.rectangular import StackedBatch, stack_rows
+    return StackedBatch(workload=b.workload, d_bucket=b.d_bucket,
+                        requests=b.requests,
+                        operand=stack_rows(b.requests, b.d_bucket,
+                                           n_rows=n_rows))
+
+
+def _rows_of(results) -> list:
+    return [np.asarray(r.rows[:r.batch.n_c]) for r in results]
+
+
+def run_baseline(batches, repeats: int):
+    """Pre-PR per-batch path: one padded launch + blocking materialise per
+    batch, no merge, no ladder, no donation."""
+    from repro.core.scheduler.coscheduler import SliceCoScheduler
+
+    cos = SliceCoScheduler(merge=False)
+    padded = [_pad_batch(b, N_C) for b in batches]
+    for b in padded[: min(8, len(padded))]:          # warm the jit caches
+        cos.dispatch(b)
+    best, results = None, None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        results = [cos.dispatch(b) for b in padded]
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    return _rows_of(results), best, dict(cos.trace_counts)
+
+
+def run_fastpath(batches, repeats: int, *, merge: bool, ladder: bool,
+                 donate: bool, async_pipeline: bool, chunk: int = 16):
+    """The dispatch fast path at one lever setting.  Batches arrive in
+    ``chunk``-sized waves (the shape a pump loop hands dispatch_mixed); the
+    async variant keeps one wave in flight while the next launches."""
+    from repro.core.scheduler.coscheduler import SliceCoScheduler
+
+    cos = SliceCoScheduler(merge=merge,
+                           row_ladder=LADDER if ladder else None,
+                           donate=donate)
+    if ladder:
+        programs = sorted({(b.workload, b.d_bucket) for b in batches})
+        cos.precompile(programs, N_C)
+    chunks = [batches[i:i + chunk] for i in range(0, len(batches), chunk)]
+    for c in chunks[:1]:                             # warm remaining shapes
+        cos.dispatch_mixed(c)
+    best, results = None, None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        results = []
+        if async_pipeline:
+            prev = None
+            for c in chunks:
+                flight = cos.launch_mixed(c)
+                if prev is not None:
+                    results.extend(cos.gather(prev))
+                prev = flight
+            results.extend(cos.gather(prev))
+        else:
+            for c in chunks:
+                results.extend(cos.dispatch_mixed(c))
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    return _rows_of(results), best, dict(cos.trace_counts)
+
+
+def sweep(n_batches: int = 200, repeats: int = 3, seed: int = 0,
+          with_bn254: bool = False) -> dict:
+    batches = make_batches(n_batches, seed=seed, with_bn254=with_bn254)
+    live_rows = sum(b.n_c for b in batches)
+    base_rows, base_s, base_traces = run_baseline(batches, repeats)
+
+    points = [{
+        "config": "per-batch", "merge": False, "ladder": False,
+        "donate": False, "async": False, "wall_s": base_s,
+        "rows_per_s": live_rows / base_s, "speedup": 1.0,
+        "trace_counts": {f"{w}/{d}": n for (w, d), n in base_traces.items()},
+        "bitexact_vs_baseline": True,
+    }]
+    grid = [
+        dict(merge=True, ladder=False, donate=False, async_pipeline=False),
+        dict(merge=False, ladder=True, donate=False, async_pipeline=False),
+        dict(merge=True, ladder=True, donate=False, async_pipeline=False),
+        dict(merge=True, ladder=True, donate=True, async_pipeline=False),
+        dict(merge=True, ladder=True, donate=True, async_pipeline=True),
+    ]
+    for g in grid:
+        rows, dt, traces = run_fastpath(batches, repeats, **g)
+        exact = all(np.array_equal(a, b) for a, b in zip(rows, base_rows))
+        if not exact:
+            raise AssertionError(f"fast path {g} diverged from the per-batch "
+                                 f"baseline — refusing to record its timing")
+        if g["ladder"]:
+            over = {k: n for k, n in traces.items() if n > len(LADDER)}
+            assert not over, f"row ladder failed to bound traces: {over}"
+        points.append({
+            "config": "+".join(k for k, v in g.items() if v) or "plain",
+            "merge": g["merge"], "ladder": g["ladder"],
+            "donate": g["donate"], "async": g["async_pipeline"],
+            "wall_s": dt, "rows_per_s": live_rows / dt,
+            "speedup": base_s / dt,
+            "trace_counts": {f"{w}/{d}": n for (w, d), n in traces.items()},
+            "bitexact_vs_baseline": True,
+        })
+    return {"batches": n_batches, "live_rows": live_rows,
+            "ladder": list(LADDER), "n_c": N_C, "points": points}
+
+
+def dry_run() -> dict:
+    """CI smoke: tiny stream, parity + retrace-guard asserts, no timing
+    claims (CI wall clocks are noise)."""
+    doc = sweep(n_batches=12, repeats=1)
+    full = next(p for p in doc["points"]
+                if p["merge"] and p["ladder"] and p["async"])
+    assert full["bitexact_vs_baseline"]
+    assert all(n <= len(LADDER) for n in full["trace_counts"].values()), doc
+    return doc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batches", type=int, default=200)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--with-bn254", action="store_true",
+                    help="mix BN254 batches into the stream (slower)")
+    ap.add_argument("--out", default="BENCH_dispatch.json")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny stream + parity/retrace asserts (CI)")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        doc = dry_run()
+        full = doc["points"][-1]
+        print(f"dry run ok: {len(doc['points'])} configs bit-exact, "
+              f"traces bounded by ladder({len(doc['ladder'])}); "
+              f"merge+ladder+donate+async speedup {full['speedup']:.2f}x "
+              f"(untracked — timing asserts are for full runs)")
+        return
+
+    doc = sweep(args.batches, args.repeats, seed=args.seed,
+                with_bn254=args.with_bn254)
+    record = write_perf_record(
+        args.out, "dispatch",
+        doc["points"], meta={k: v for k, v in doc.items() if k != "points"})
+    for p in doc["points"]:
+        print(f"{p['config']:<28} {p['wall_s']*1e3:8.1f} ms "
+              f"{p['rows_per_s']:10.0f} rows/s  {p['speedup']:.2f}x")
+    full = doc["points"][-1]
+    print(f"\nmerge+async speedup over per-batch: {full['speedup']:.2f}x "
+          f"(acceptance floor 1.3x); wrote {args.out}")
+    print(json.dumps(record["env"], sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

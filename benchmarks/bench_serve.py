@@ -24,7 +24,9 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def sweep(rates=(512, 1024, 2048), *, duration_s=0.02, n_c=8,
-          max_age_s=0.005, d_uniform=256, seed=0) -> list[dict]:
+          max_age_s=0.005, d_uniform=256, seed=0, merge_dispatch=True,
+          row_ladder_max=None, donate=False,
+          async_pipeline=False) -> list[dict]:
     from repro.launch.serve import serve_crypto_online
 
     points = []
@@ -33,14 +35,20 @@ def sweep(rates=(512, 1024, 2048), *, duration_s=0.02, n_c=8,
         load, snap, dt = serve_crypto_online(
             duration_s=duration_s, rate_hz=rate, n_c=n_c,
             max_age_s=max_age_s, d_uniform=d_uniform, seed=seed,
+            merge_dispatch=merge_dispatch, row_ladder_max=row_ladder_max,
+            donate=donate, async_pipeline=async_pipeline,
             validate=False)      # HLO validation is tested elsewhere; this
                                  # sweep measures the serving path itself
         lat = snap["latency"]
+        disp = snap["dispatch"]
         points.append({
             "rate_hz": rate,
             "duration_s": duration_s,
             "n_c": n_c,
             "max_age_s": max_age_s,
+            "fast_path": {"merge": merge_dispatch,
+                          "row_ladder_max": row_ladder_max,
+                          "donate": donate, "async": async_pipeline},
             "wall_s": dt,
             "served": load.n_served,
             "rejected": len(load.rejected),
@@ -48,6 +56,13 @@ def sweep(rates=(512, 1024, 2048), *, duration_s=0.02, n_c=8,
             "close_reasons": snap["close_reasons"],
             "k_occupancy_mean": snap["k_occupancy_mean"],
             "m_occupancy_mean": snap["m_occupancy_mean"],
+            # achieved per-launch M fill after super-batching + ladder
+            # padding — the recovered M-occupancy this PR tracks
+            "dispatches": disp["dispatches"],
+            "merged_dispatches": disp["merged_dispatches"],
+            "batches_per_dispatch_mean": disp["batches_per_dispatch_mean"],
+            "dispatch_m_occupancy_mean": disp["m_occupancy_mean"],
+            "dispatch_m_fill_mean": disp["m_fill_mean"],
             "queue_depth_mean": snap["queue_depth_mean"],
             "queue_depth_max": snap["queue_depth_max"],
             "p50_s": lat["p50_s"], "p95_s": lat["p95_s"],
@@ -68,6 +83,7 @@ def run(fast: bool = True):
                f"p99={pt['p99_s'] * 1e6:.0f}us"
                f";k_occ={pt['k_occupancy_mean']:.3f}"
                f";m_occ={pt['m_occupancy_mean']:.3f}"
+               f";m_fill={pt['dispatch_m_fill_mean']:.3f}"
                f";served={pt['served']};rejected={pt['rejected']}")
 
 
@@ -78,15 +94,22 @@ def main():
     ap.add_argument("--n-c", type=int, default=8)
     ap.add_argument("--max-age-ms", type=float, default=5.0)
     ap.add_argument("--d-uniform", type=int, default=256)
+    ap.add_argument("--no-merge", action="store_true")
+    ap.add_argument("--row-ladder-max", type=int, default=None)
+    ap.add_argument("--donate", action="store_true")
+    ap.add_argument("--async-pipeline", action="store_true")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
-    from benchmarks.common import parse_rate_ladder
+    from benchmarks.common import parse_rate_ladder, perf_record
 
     points = sweep(parse_rate_ladder(args.rates),
                    duration_s=args.duration, n_c=args.n_c,
-                   max_age_s=args.max_age_ms / 1e3, d_uniform=args.d_uniform)
-    doc = {"bench": "serve_online", "points": points}
+                   max_age_s=args.max_age_ms / 1e3, d_uniform=args.d_uniform,
+                   merge_dispatch=not args.no_merge,
+                   row_ladder_max=args.row_ladder_max, donate=args.donate,
+                   async_pipeline=args.async_pipeline)
+    doc = perf_record("serve_online", points)
     text = json.dumps(doc, indent=2, sort_keys=True)
     if args.out:
         with open(args.out, "w") as f:

@@ -1,6 +1,8 @@
 """Shared benchmark utilities + the paper's recorded external baselines."""
 from __future__ import annotations
 
+import json
+import platform
 import time
 
 import numpy as np
@@ -25,6 +27,42 @@ def time_fn(fn, *args, warmup: int = 2, repeats: int = 5) -> dict:
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.2f},{derived}"
+
+
+# --- BENCH_* perf records (the repo's tracked perf trajectory) ----------------
+
+PERF_SCHEMA = 1
+
+
+def perf_record(bench: str, points: list, meta: dict | None = None) -> dict:
+    """One ``BENCH_<name>.json`` document: a stable envelope around a list of
+    measurement points, stamped with enough environment to compare runs
+    across commits (the perf-trajectory contract shared by every bench)."""
+    doc = {
+        "bench": bench,
+        "schema": PERF_SCHEMA,
+        "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "env": {
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "jax": jax.__version__,
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+        },
+        "points": points,
+    }
+    if meta:
+        doc["meta"] = meta
+    return doc
+
+
+def write_perf_record(path: str, bench: str, points: list,
+                      meta: dict | None = None) -> dict:
+    """Assemble + write a perf record; returns the document."""
+    doc = perf_record(bench, points, meta)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    return doc
 
 
 # --- Rate ladders + trace generation (shared by bench_serve / bench_cluster) --

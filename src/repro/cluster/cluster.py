@@ -30,8 +30,8 @@ import dataclasses
 import json
 import time
 
-from repro.core.scheduler.coscheduler import SliceCoScheduler
-from repro.serve.server import CryptoServer, ServeConfig
+from repro.serve.server import (CryptoServer, ServeConfig,
+                                coscheduler_from_config)
 from repro.cluster.gossip import GossipBus
 from repro.cluster.router import TenantHashRouter
 from repro.cluster.telemetry import merge_snapshots
@@ -66,11 +66,9 @@ class ClusterServer:
             if coscheduler_factory is not None:
                 cos = coscheduler_factory(h)
             else:
-                s = cfg.serve
-                cos = SliceCoScheduler(
-                    accum=s.accum, reduction=s.reduction,
-                    reduction_by_workload=s.reduction_by_workload,
-                    kappa=s.kappa, d_tile=s.d_tile, host=h)
+                # Each host gets the full dispatch fast path (super-batching,
+                # row ladder, donation) from the shared serve config.
+                cos = coscheduler_from_config(cfg.serve, host=h)
             srv = CryptoServer(cfg.serve, coscheduler=cos)
             srv.cluster_depth_fn = self._make_depth_fn(h)
             self.hosts.append(srv)

@@ -94,6 +94,28 @@ def _merge_per_workload(snaps: list[dict]) -> dict:
     return out
 
 
+def _merge_dispatch(snaps: list[dict]) -> dict:
+    """Merge the per-host dispatch-fast-path sections (counters sum; means
+    are dispatch-weighted; pad_fraction is recomputed from the merged row
+    totals so it stays exact).  Hosts predating the section contribute
+    nothing."""
+    parts = [s.get("dispatch") for s in snaps]
+    parts = [p for p in parts if p]
+    out = {"dispatches": 0, "merged_dispatches": 0, "live_rows": 0,
+           "launched_rows": 0, "donated": 0}
+    for p in parts:
+        for k in out:
+            out[k] += p.get(k, 0)
+    weights = [p.get("dispatches", 0) for p in parts]
+    for key in ("batches_per_dispatch_mean", "m_occupancy_mean",
+                "m_fill_mean"):
+        out[key] = _weighted_mean(
+            [(p.get(key, 0.0), w) for p, w in zip(parts, weights)])
+    out["pad_fraction"] = (1.0 - out["live_rows"] / out["launched_rows"]
+                           if out["launched_rows"] else 0.0)
+    return out
+
+
 def _merge_reduction_stalls(snaps: list[dict]) -> dict:
     out = {"eager_folds": 0, "deferred_folds": 0, "by_close_reason": {}}
     for snap in snaps:
@@ -152,6 +174,7 @@ def merge_snapshots(snaps: list[dict]) -> dict:
         "close_reasons": _merge_counter_dicts(s["close_reasons"]
                                               for s in snaps),
         "reduction_stalls": _merge_reduction_stalls(snaps),
+        "dispatch": _merge_dispatch(snaps),
         "per_workload": _merge_per_workload(snaps),
         "latency": _merge_histograms([s["latency"] for s in snaps]),
         "queue_wait": _merge_histograms([s["queue_wait"] for s in snaps]),

@@ -117,6 +117,22 @@ class ChannelPlan:
         return out
 
 
+def plane_operands(plan: ChannelPlan):
+    """Device-resident copies of a plan's twiddle tensors, uploaded once.
+
+    Returns ``(w_planes, fused_operand)`` with exactly one entry non-None
+    (matching the plan's mode).  Passing these to
+    :func:`staged_transform` via ``planes=`` makes the twiddle tensors jit
+    *arguments* instead of baked host constants, so (a) the host→device
+    upload happens once per engine rather than once per trace, and (b)
+    ladder retraces at new batch heights reuse the same device buffers —
+    the dispatch fast path's zero-re-embedding contract.
+    """
+    if plan.fused_operand is not None:
+        return (None, jax.device_put(plan.fused_operand))
+    return (jax.device_put(plan.w_planes), None)
+
+
 def _fused_operand(w_planes: np.ndarray, data_limbs: int) -> np.ndarray:
     """Interleave twiddle limb planes into the fused (d·La, d·n_diag) matrix."""
     d, d2, lw = w_planes.shape
@@ -206,11 +222,17 @@ def staged_transform(
     kernel_fn=None,
     fold_fn=None,
     d_max: int | None = None,
+    planes=None,
 ):
     """Full staged matrix transform of one channel.
 
     a_u32: (N, d) uint32 coefficients (values < modulus).
     Returns ((N, d) uint32 result, stats dict with fold/pass/window counts).
+
+    ``planes`` — optional ``(w_planes, fused_operand)`` pair of *traced or
+    device-resident* twiddle tensors (see :func:`plane_operands`).  When
+    given, staging tiles are sliced from them instead of re-embedding the
+    host-side plan constants into every trace; semantics are identical.
 
     eager: fold + optimization_barrier after every staging pass (the
       multi-tenant isolation discipline — Invariant 5.1); ``kappa`` must be
@@ -247,17 +269,19 @@ def staged_transform(
         acc = ACC.LazyWindowAccumulator(plan.modulus, plan.accum, c,
                                         kappa=windows[0], fold_fn=fold_fn)
 
+    w_full, f_full = planes if planes is not None else (None, None)
     y = jnp.zeros((n, plan.d), jnp.uint32)
     for t, (lo, hi) in enumerate(tiles):
         with jax.named_scope(f"staging_pass_{t}"):
             a_tile = a_u32[:, lo:hi]
-            w_tile = None if plan.fused_operand is not None else jnp.asarray(
-                plan.w_planes[lo:hi])
-            f_tile = None
+            w_tile, f_tile = None, None
             if plan.fused_operand is not None:
                 la = plan.data_limbs
-                f_tile = jnp.asarray(
-                    plan.fused_operand[lo * la:hi * la])
+                f_tile = (f_full[lo * la:hi * la] if f_full is not None
+                          else jnp.asarray(plan.fused_operand[lo * la:hi * la]))
+            else:
+                w_tile = (w_full[lo:hi] if w_full is not None
+                          else jnp.asarray(plan.w_planes[lo:hi]))
             if kernel_fn is not None:
                 diag = kernel_fn(a_tile, w_tile, f_tile, plan)
             else:

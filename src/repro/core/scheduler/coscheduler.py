@@ -1,4 +1,4 @@
-"""Tier 2 — the Slice-Level Co-Scheduler (paper §4.1).
+"""Tier 2 — the Slice-Level Co-Scheduler (paper §4.1) + the dispatch fast path.
 
 Maps workload-homogeneous stacked batches onto *disjoint device groups* of a
 pod slice so heterogeneous cryptographic primitives (Dilithium next to BN254)
@@ -7,14 +7,35 @@ dispatched with batch rows sharded across the group's devices; workload-zone
 scopes (:mod:`repro.core.zones`) travel into the HLO for the post-hoc
 validator.
 
+The dispatch fast path (the hottest loop in the repo) adds three levers, all
+bit-for-bit neutral:
+
+* **M-axis super-batching** (``merge``) — ``dispatch_mixed`` coalesces
+  same-``(workload, d_bucket, reduction)`` stacked batches into one tall
+  operand before launch, recovering the M-dimension fill the paper measures
+  collapsing to 6.25% on v4.  Row semantics (Property 5.1) make the merged
+  launch equal to the per-batch launches row-for-row.
+* **Row-ladder compile cache** (``row_ladder``) — batch heights are padded up
+  to a small geometric ladder of rungs (e.g. 8→16→…→128) so ``trace_counts``
+  per ``(workload, d_bucket)`` is bounded by the ladder size instead of by
+  the number of distinct arrival counts; padded rows are all-zero and sliced
+  off before tenant routing.  ``precompile`` warms every rung.
+* **Zero-sync two-phase pipeline** — ``launch_mixed`` enqueues every program
+  and starts the device→host copies asynchronously; ``gather`` materialises
+  later, so a pump loop can launch batch *n+1* before batch *n*'s result
+  crosses PCIe.  ``donate=True`` additionally donates the operand buffer to
+  its e2e program (``donate_argnums``), and twiddle/fused planes are passed
+  as device-resident jit arguments (uploaded once per engine) instead of
+  being re-embedded as host constants at every trace.
+
 On a 1-device CPU test rig every group degenerates to the same device —
 multi-device behaviour is exercised via subprocess tests and the pod-slice
 dry-run.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-import math
 
 import numpy as np
 import jax
@@ -23,7 +44,27 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import limb_gemm as G
 from repro.core import workloads as WK
-from repro.core.scheduler.rectangular import StackedBatch
+from repro.core.scheduler.rectangular import StackedBatch, merge_operands
+
+# Bounded history of per-launch merge/padding records (the serving layer
+# drains it into telemetry after every dispatch; non-serving callers just
+# let old entries fall off).
+DISPATCH_LOG_MAX = 4096
+
+
+def default_row_ladder(n_max: int, n_min: int = 8) -> tuple[int, ...]:
+    """Geometric rung set ``n_min, 2·n_min, … ≥ n_max`` (the compile-cache
+    ladder).  ``len(default_row_ladder(128)) == 5`` — and so is the bound on
+    ``trace_counts`` per program class."""
+    if n_max < 1 or n_min < 1:
+        raise ValueError(f"row ladder needs positive bounds "
+                         f"(got n_min={n_min}, n_max={n_max})")
+    rungs, r = [], n_min
+    while r < n_max:
+        rungs.append(r)
+        r *= 2
+    rungs.append(n_max)     # top rung is exactly n_max (the merge cap)
+    return tuple(rungs)
 
 
 @dataclasses.dataclass
@@ -36,6 +77,24 @@ class DispatchResult:
     rows: object = None    # (n_rows, ...) result array, batch row order
 
 
+@dataclasses.dataclass
+class _LaunchGroup:
+    """One compiled-program launch: ≥1 same-class batches stacked along M."""
+    workload: str
+    d_bucket: int
+    members: list          # (input index, StackedBatch, row_lo, row_hi)
+    operand_rows: int = 0  # stacked operand height before ladder padding
+    live_rows: int = 0     # tenant rows only (excludes batcher zero-pad rows)
+
+
+@dataclasses.dataclass
+class InflightDispatch:
+    """launch_mixed → gather handle: device results with D2H copies already
+    streaming; gathering materialises without re-synchronising launches."""
+    groups: list           # (_LaunchGroup, engine, device result)
+    n_batches: int
+
+
 class SliceCoScheduler:
     """Static workload → device-group assignment over a pod slice.
 
@@ -44,13 +103,17 @@ class SliceCoScheduler:
     the slice with strictly-eager tenants — each class keeps its own engines,
     compiled programs, and device group, so the disciplines never mix inside
     one program (paper §7.2.1).  Mode strings are validated here: a typo must
-    fail construction, not silently trace the eager path.
+    fail construction, not silently trace the eager path — and so must an
+    all-eager config carrying κ>1, which used to construct silently and only
+    blow up (or record a bogus κ) deep in dispatch.
     """
 
     def __init__(self, assignment: dict[str, list] | None = None,
                  *, accum: str = "fp32_mantissa", reduction: str = "eager",
                  reduction_by_workload: dict[str, str] | None = None,
                  kappa: int | None = None, d_tile: int | None = None,
+                 merge: bool = True, row_ladder: tuple | None = None,
+                 merge_rows_max: int = 128, donate: bool = False,
                  host: int | None = None):
         devices = jax.devices()
         if assignment is None:
@@ -66,8 +129,23 @@ class SliceCoScheduler:
                 raise ValueError(f"unknown workload class {w!r} in "
                                  f"reduction_by_workload")
             G.check_reduction(mode)
+        # κ only means something under lazy folding: if no class is lazy,
+        # reject the deferral depth at construction time.
+        modes = {self.reduction} | set(self.reduction_by_workload.values())
+        if "lazy" not in modes:
+            G.check_reduction(self.reduction, kappa)
         self.kappa = kappa
         self.d_tile = d_tile
+        self.merge = merge
+        if row_ladder is not None:
+            row_ladder = tuple(sorted(row_ladder))
+            if not row_ladder or row_ladder[0] < 1:
+                raise ValueError(f"row_ladder rungs must be positive, got "
+                                 f"{row_ladder}")
+        self.row_ladder = row_ladder
+        self.merge_rows_max = (row_ladder[-1] if row_ladder
+                               else merge_rows_max)
+        self.donate = donate
         # Cluster mode runs one co-scheduler per host slice; the owning host id
         # travels into per-host telemetry so compiled-program caches and trace
         # counters stay attributable after snapshots are merged.
@@ -80,8 +158,13 @@ class SliceCoScheduler:
         self._jitted: dict = {}
         # (workload, d_bucket) -> number of times XLA retraced the program.
         # Incremented inside the traced body, so cached executions leave it
-        # untouched; one count per distinct operand shape is the healthy state.
+        # untouched; with a row ladder the count is bounded by the ladder
+        # size (one trace per rung), asserted by the retrace-guard tests.
         self.trace_counts: dict = {}
+        # One record per launched program (merge width, live vs launched
+        # rows) — the serving telemetry's per-dispatch M-occupancy source.
+        self.dispatch_log: collections.deque = collections.deque(
+            maxlen=DISPATCH_LOG_MAX)
 
     def reduction_for(self, workload: str) -> str:
         """The fold discipline this slice applies to a workload class."""
@@ -90,48 +173,74 @@ class SliceCoScheduler:
     def engine_for(self, workload: str, d: int):
         key = (workload, d)
         if key not in self._engines:
+            mode = self.reduction_for(workload)
+            # κ belongs to the lazy classes only: an eager engine carrying a
+            # deferral depth would refuse to trace (check_reduction) — and
+            # recording one that never happened would corrupt bench records.
             self._engines[key] = WK.make_engine(
-                workload, d, accum=self.accum,
-                reduction=self.reduction_for(workload), kappa=self.kappa,
+                workload, d, accum=self.accum, reduction=mode,
+                kappa=self.kappa if mode == "lazy" else None,
                 d_tile=self.d_tile)
         return self._engines[key]
 
     def jitted_for(self, workload: str, d: int):
         """One compiled e2e program per (workload, d_bucket), reused across
         dispatches — rebuilding ``jax.jit(eng.e2e)`` per dispatch discards the
-        executable cache and recompiles every batch."""
+        executable cache and recompiles every batch.  The twiddle planes are
+        jit *arguments* (device-resident, uploaded once per engine), so a
+        ladder retrace at a new batch height re-embeds no host constants; with
+        ``donate`` the operand buffer is donated to the program."""
         key = (workload, d)
         if key not in self._jitted:
             eng = self.engine_for(workload, d)
 
-            def _e2e(operand, _eng=eng, _key=key):
+            def _e2e(operand, planes, _eng=eng, _key=key):
                 self.trace_counts[_key] = self.trace_counts.get(_key, 0) + 1
-                return _eng.e2e(operand)
+                return _eng.e2e(operand, planes=planes)
 
-            self._jitted[key] = jax.jit(_e2e)
+            self._jitted[key] = jax.jit(
+                _e2e, donate_argnums=(0,) if self.donate else ())
         return self._jitted[key]
 
+    def launch_rows(self, n_rows: int) -> int:
+        """Launched operand height for ``n_rows`` live rows: the smallest
+        ladder rung ≥ n_rows, or n_rows itself without a ladder (or beyond
+        the top rung — oversize batches launch at natural height)."""
+        if self.row_ladder is not None:
+            for rung in self.row_ladder:
+                if rung >= n_rows:
+                    return rung
+        return n_rows
+
     def operand_shape(self, workload: str, d: int, n_c: int) -> tuple:
-        """Device operand shape of one stacked batch — the jit cache key."""
+        """Device operand shape of one ``n_c``-live-row launch — the jit
+        cache key (ladder-padded when a row ladder is configured)."""
+        rows = self.launch_rows(n_c)
         if workload == "dilithium":
-            return (n_c, d)
-        return (n_c, d, self.engine_for(workload, d).n_channels)
+            return (rows, d)
+        return (rows, d, self.engine_for(workload, d).n_channels)
 
     def precompile(self, programs, n_c: int) -> int:
         """Warm-start the compiled-program cache: trace + compile the known
-        ``(workload, d_bucket)`` set for ``n_c``-row operands before first
-        dispatch, so cold-start p99 is not dominated by XLA compilation.
-        Returns the number of fresh traces this triggered; a later dispatch
-        of any warmed program at the same shape must trigger zero more
-        (asserted via ``trace_counts`` in the serving tests)."""
+        ``(workload, d_bucket)`` set before first dispatch, so cold-start p99
+        is not dominated by XLA compilation.  Without a row ladder one
+        ``n_c``-row shape per program is warmed; with a ladder every rung is
+        (live heights then always hit a warm rung).  Returns the number of
+        fresh traces this triggered; a later dispatch of any warmed program
+        at a warmed shape must trigger zero more (asserted via
+        ``trace_counts`` in the serving tests)."""
+        rungs = list(self.row_ladder) if self.row_ladder else [n_c]
         n_new = 0
         for workload, d in programs:
             key = (workload, d)
+            planes = self.engine_for(workload, d).device_planes()
             before = self.trace_counts.get(key, 0)
-            operand = jnp.zeros(self.operand_shape(workload, d, n_c),
-                                jnp.uint32)
-            out = self.jitted_for(workload, d)(self._shard(workload, operand))
-            jax.block_until_ready(out)
+            for rung in rungs:
+                operand = jnp.zeros(self.operand_shape(workload, d, rung),
+                                    jnp.uint32)
+                out = self.jitted_for(workload, d)(
+                    self._shard(workload, operand), planes)
+                jax.block_until_ready(out)
             n_new += self.trace_counts.get(key, 0) - before
         return n_new
 
@@ -145,41 +254,124 @@ class SliceCoScheduler:
             spec = P()
         return jax.device_put(operand, NamedSharding(mesh, spec))
 
-    def _launch(self, batch: StackedBatch):
-        """Enqueue one stacked batch on its workload's device group and return
-        the in-flight device result without materialising it."""
-        eng = self.engine_for(batch.workload, batch.d_bucket)
-        if batch.workload == "dilithium":
-            operand = jnp.asarray(batch.operand)            # (N_c, d)
-        else:
-            if batch.operand.ndim == 2:                     # raw words → residues
-                operand = eng.ingest(batch.operand.astype(object))
-            else:
-                operand = jnp.asarray(batch.operand)        # (N_c, d, C)
-        operand = self._shard(batch.workload, operand)
-        out = self.jitted_for(batch.workload, batch.d_bucket)(operand)
-        return batch, eng, out
+    # --- group planning + launch ----------------------------------------------
 
-    def _materialise(self, batch: StackedBatch, eng, out) -> DispatchResult:
+    def _plan_groups(self, batches: list[StackedBatch]) -> list[_LaunchGroup]:
+        """Cut a dispatch set into launch groups: same-(workload, d_bucket,
+        reduction) batches coalesce along M (``merge``) up to the top ladder
+        rung / ``merge_rows_max``; groups keep first-appearance launch order
+        and members remember their input index for order-preserving gather."""
+        groups: list[_LaunchGroup] = []
+        open_group: dict[tuple, _LaunchGroup] = {}
+        for i, b in enumerate(batches):
+            rows = b.operand.shape[0] if b.operand is not None else b.n_c
+            key = (b.workload, b.d_bucket, self.reduction_for(b.workload))
+            g = open_group.get(key) if self.merge else None
+            if g is None or g.operand_rows + rows > self.merge_rows_max:
+                g = _LaunchGroup(workload=b.workload, d_bucket=b.d_bucket,
+                                 members=[])
+                groups.append(g)
+                if self.merge:
+                    open_group[key] = g
+            g.members.append((i, b, g.operand_rows, g.operand_rows + rows))
+            g.operand_rows += rows
+            g.live_rows += b.n_c
+        return groups
+
+    def _member_operand(self, batch: StackedBatch, eng) -> np.ndarray:
+        if batch.workload == "dilithium":
+            return np.asarray(batch.operand, np.uint32)    # (N, d)
+        if batch.operand.ndim == 2:                        # raw words → residues
+            return np.asarray(eng.ingest(batch.operand.astype(object)))
+        return np.asarray(batch.operand)                   # (N, d, C)
+
+    def _launch(self, group: _LaunchGroup):
+        """Enqueue one launch group on its workload's device group and return
+        the in-flight device result without materialising it."""
+        eng = self.engine_for(group.workload, group.d_bucket)
+        members = [self._member_operand(b, eng)
+                   for _, b, _, _ in group.members]
+        rows = self.launch_rows(group.operand_rows)
+        if len(members) == 1 and members[0].shape[0] == rows:
+            operand_np = members[0]        # singleton at a rung: no host copy
+        else:
+            operand_np = merge_operands(members, n_rows=rows)
+        operand = self._shard(group.workload, jnp.asarray(operand_np))
+        out = self.jitted_for(group.workload, group.d_bucket)(
+            operand, eng.device_planes())
+        # live_rows counts tenant rows only — batcher zero-pad rows inside a
+        # member operand are dead M just like ladder padding, so they must
+        # not inflate the achieved-fill telemetry.
+        self.dispatch_log.append({
+            "workload": group.workload, "d_bucket": group.d_bucket,
+            "n_batches": len(group.members), "live_rows": group.live_rows,
+            "launched_rows": int(operand_np.shape[0]),
+            "donated": self.donate})
+        return group, eng, out
+
+    def _materialise(self, group: _LaunchGroup, eng, out):
+        """Gather one group's device result and split it back into one
+        :class:`DispatchResult` per member batch (ladder-pad rows dropped,
+        rows routed by position within each member's slice)."""
         res = np.asarray(out)
-        outputs = {r.tenant_id: res[i] for i, r in enumerate(batch.requests)}
         # last_stats is trace-time state (one channel's staged_transform);
         # fold_profile is the static whole-program census — deterministic per
         # (workload, d_bucket) and what the serve telemetry aggregates.
         stats = dict(getattr(eng, "last_stats", {}) or {})
         stats.update(eng.fold_profile)
-        return DispatchResult(batch=batch, outputs=outputs, stats=stats,
-                              rows=res)
+        results = []
+        for idx, batch, lo, hi in group.members:
+            rows = res[lo:hi]
+            outputs = {r.tenant_id: rows[i]
+                       for i, r in enumerate(batch.requests)}
+            results.append((idx, DispatchResult(
+                batch=batch, outputs=outputs, stats=dict(stats), rows=rows)))
+        return results
+
+    @staticmethod
+    def _start_transfer(out):
+        """Begin the device→host copy without blocking (phase 2 of the
+        zero-sync pipeline; ``np.asarray`` in gather then finds the bytes
+        already on their way)."""
+        for leaf in jax.tree_util.tree_leaves(out):
+            copy = getattr(leaf, "copy_to_host_async", None)
+            if copy is not None:
+                copy()
+
+    # --- public dispatch surface ----------------------------------------------
+
+    def launch_mixed(self, batches: list[StackedBatch]) -> InflightDispatch:
+        """Phase 1+2 of a dispatch: enqueue every launch group (all launches
+        before any host transfer — materialising between launches would
+        serialise the device groups behind a blocking ``np.asarray``), then
+        start every device→host copy asynchronously."""
+        inflight = [self._launch(g) for g in self._plan_groups(batches)]
+        for _, _, out in inflight:
+            self._start_transfer(out)
+        return InflightDispatch(groups=inflight, n_batches=len(batches))
+
+    def gather(self, flight: InflightDispatch) -> list[DispatchResult]:
+        """Phase 3: materialise an in-flight dispatch, input batch order."""
+        results: list = [None] * flight.n_batches
+        for f in flight.groups:
+            for idx, dr in self._materialise(*f):
+                results[idx] = dr
+        return results
 
     def dispatch(self, batch: StackedBatch) -> DispatchResult:
         """Execute one stacked batch on its workload's device group."""
-        return self._materialise(*self._launch(batch))
+        return self.dispatch_mixed([batch])[0]
 
     def dispatch_mixed(self, batches: list[StackedBatch]) -> list[DispatchResult]:
         """Concurrent heterogeneous dispatch: per-class programs launched
         back-to-back; XLA queues them on disjoint device groups so Dilithium
-        and BN254 batches overlap on real multi-device slices.  All launches
-        happen before any host transfer — materialising between launches
-        would serialise the groups behind a blocking ``np.asarray``."""
-        inflight = [self._launch(b) for b in batches]
-        return [self._materialise(*f) for f in inflight]
+        and BN254 batches overlap on real multi-device slices, while
+        same-class batches coalesce into tall super-batches (``merge``)."""
+        return self.gather(self.launch_mixed(batches))
+
+    def drain_dispatch_log(self) -> list[dict]:
+        """Hand the accumulated per-launch records to the caller (serving
+        telemetry) and reset the log."""
+        log = list(self.dispatch_log)
+        self.dispatch_log.clear()
+        return log

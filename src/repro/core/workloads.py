@@ -103,6 +103,7 @@ class DilithiumEngine:
             w, F.DILITHIUM_Q, data_limbs=3, tw_limbs=3, accum=accum)
         self.fold_profile = _fold_profile([self.plan], self.reduction, kappa,
                                           d_tile)
+        self._device_planes = None
 
     @property
     def n_passes(self) -> int:
@@ -112,12 +113,21 @@ class DilithiumEngine:
     def n_diag(self) -> int:
         return self.plan.n_diag
 
-    def evaluate(self, a_u32, *, kernel_fn=None):
+    def device_planes(self):
+        """Per-channel ``(w_planes, fused)`` twiddle tensors, uploaded to the
+        device once per engine (dispatch fast path: retraces at new batch
+        heights reuse these buffers instead of re-embedding host constants)."""
+        if self._device_planes is None:
+            self._device_planes = [G.plane_operands(self.plan)]
+        return self._device_planes
+
+    def evaluate(self, a_u32, *, kernel_fn=None, planes=None):
         """(N, d) uint32 -> (N, d) uint32 forward NTT (one op per row)."""
         with jax.named_scope("wzone_dilithium"), jax.named_scope("pzone_3limb"):
             y, self.last_stats = G.staged_transform(
                 a_u32, self.plan, reduction=self.reduction, kappa=self.kappa,
-                d_max=self.d_tile, kernel_fn=kernel_fn)
+                d_max=self.d_tile, kernel_fn=kernel_fn,
+                planes=planes[0] if planes is not None else None)
         return y
 
     e2e = evaluate  # Dilithium op == the forward transform
@@ -152,6 +162,7 @@ class BN254Engine:
                 w_ch, m, data_limbs=4, tw_limbs=4, accum=accum))
         self.fold_profile = _fold_profile(self.plans, self.reduction, kappa,
                                           d_tile)
+        self._device_planes = None
 
     @property
     def n_channels(self) -> int:
@@ -169,7 +180,15 @@ class BN254Engine:
         """Host object-int coefficients [..., d] -> (..., d, C) uint32."""
         return jnp.asarray(R.to_rns_np(coeffs_np, self.chain))
 
-    def evaluate(self, a_res, *, kernel_fn=None):
+    def device_planes(self):
+        """Per-channel ``(w_planes, fused)`` twiddle tensors, uploaded to the
+        device once per engine (dispatch fast path: retraces at new batch
+        heights reuse these buffers instead of re-embedding host constants)."""
+        if self._device_planes is None:
+            self._device_planes = [G.plane_operands(p) for p in self.plans]
+        return self._device_planes
+
+    def evaluate(self, a_res, *, kernel_fn=None, planes=None):
         """(N, d, C) uint32 residues -> (N, d, C) transformed residues."""
         outs = []
         self.last_stats = None
@@ -179,7 +198,8 @@ class BN254Engine:
                     y, st = G.staged_transform(
                         a_res[..., ci], plan, reduction=self.reduction,
                         kappa=self.kappa, d_max=self.d_tile,
-                        kernel_fn=kernel_fn)
+                        kernel_fn=kernel_fn,
+                        planes=planes[ci] if planes is not None else None)
                 outs.append(y)
                 self.last_stats = st
         return jnp.stack(outs, axis=-1)
@@ -189,9 +209,10 @@ class BN254Engine:
         with jax.named_scope("wzone_bn254"), jax.named_scope("vpu_montgomery"):
             return R.rns_to_field(y_res, self.chain)
 
-    def e2e(self, a_res, *, kernel_fn=None):
+    def e2e(self, a_res, *, kernel_fn=None, planes=None):
         """The paper's BN254 op for N stacked tenant rows."""
-        return self.reduce(self.evaluate(a_res, kernel_fn=kernel_fn))
+        return self.reduce(self.evaluate(a_res, kernel_fn=kernel_fn,
+                                         planes=planes))
 
     # --- host oracles ---------------------------------------------------------
 

@@ -95,6 +95,8 @@ def serve_crypto_online(*, duration_s=0.05, rate_hz=2048, n_c=8,
                         kappa=None, d_tile=None,
                         max_pending=1024, tenant_rate_hz=None,
                         slo_deadline_s=None, occupancy_close=None,
+                        merge_dispatch=True, row_ladder_max=None,
+                        donate=False, async_pipeline=False, warm_start=None,
                         telemetry_out=None, realtime=False, coscheduler=None):
     """Closed loop over the online runtime: load generator → admission →
     continuous batcher → co-scheduled dispatch → per-tenant results."""
@@ -108,7 +110,10 @@ def serve_crypto_online(*, duration_s=0.05, rate_hz=2048, n_c=8,
                       kappa=kappa, d_tile=d_tile,
                       tenant_rate_hz=tenant_rate_hz,
                       slo_deadline_s=slo_deadline_s,
-                      occupancy_close=occupancy_close)
+                      occupancy_close=occupancy_close,
+                      merge_dispatch=merge_dispatch,
+                      row_ladder_max=row_ladder_max, donate=donate,
+                      async_pipeline=async_pipeline, warm_start=warm_start)
     server = CryptoServer(cfg, coscheduler=coscheduler)
     gen = LoadGenerator(PoissonTrace(rate_hz=rate_hz, duration_s=duration_s,
                                      uniform_degree=d_uniform, seed=seed),
@@ -129,6 +134,8 @@ def serve_crypto_cluster(*, hosts=2, duration_s=0.05, rate_hz=2048, n_c=8,
                          tenant_rate_hz=None, slo_deadline_s=None,
                          occupancy_close=None, gossip_period_s=0.002,
                          gossip_staleness_factor=2.0, pinned=None,
+                         merge_dispatch=True, row_ladder_max=None,
+                         donate=False, async_pipeline=False,
                          warm_start=None, telemetry_out=None, trace=None,
                          realtime=False, coscheduler_factory=None):
     """Closed loop over an N-host sharded cluster: tenant-hash ingress →
@@ -146,7 +153,8 @@ def serve_crypto_cluster(*, hosts=2, duration_s=0.05, rate_hz=2048, n_c=8,
         reduction_by_workload=reduction_by_workload, kappa=kappa,
         d_tile=d_tile, tenant_rate_hz=tenant_rate_hz,
         slo_deadline_s=slo_deadline_s, occupancy_close=occupancy_close,
-        warm_start=warm_start)
+        merge_dispatch=merge_dispatch, row_ladder_max=row_ladder_max,
+        donate=donate, async_pipeline=async_pipeline, warm_start=warm_start)
     cluster = ClusterServer(
         ClusterConfig(n_hosts=hosts, gossip_period_s=gossip_period_s,
                       gossip_staleness_factor=gossip_staleness_factor,
@@ -201,6 +209,16 @@ def main():
     ap.add_argument("--d-tile", type=int, default=None,
                     help="staging-pass tile width override (e.g. 171 keeps the "
                          "fp32-era pass structure under --accum int32_native)")
+    ap.add_argument("--no-merge", action="store_true",
+                    help="disable M-axis super-batching of same-class batches")
+    ap.add_argument("--row-ladder-max", type=int, default=None,
+                    help="enable the row-ladder compile cache with rungs "
+                         "8→16→…→MAX (bounds XLA retraces per program class)")
+    ap.add_argument("--donate", action="store_true",
+                    help="donate operand buffers to the e2e programs")
+    ap.add_argument("--async-pipeline", action="store_true",
+                    help="zero-sync dispatch: launch now, gather at the next "
+                         "serving event")
     args = ap.parse_args()
 
     reduction_by_workload = None
@@ -227,6 +245,9 @@ def main():
             reduction_by_workload=reduction_by_workload,
             kappa=args.kappa, d_tile=args.d_tile,
             gossip_period_s=args.gossip_period_ms / 1e3,
+            merge_dispatch=not args.no_merge,
+            row_ladder_max=args.row_ladder_max, donate=args.donate,
+            async_pipeline=args.async_pipeline,
             telemetry_out=args.telemetry_out, realtime=args.realtime)
         m = snap["merged"]
         served = sum(1 for h in load.handles if h.done() and not h.rejected)
@@ -262,6 +283,9 @@ def main():
             accum=args.accum, reduction=args.reduction,
             reduction_by_workload=reduction_by_workload,
             kappa=args.kappa, d_tile=args.d_tile,
+            merge_dispatch=not args.no_merge,
+            row_ladder_max=args.row_ladder_max, donate=args.donate,
+            async_pipeline=args.async_pipeline,
             telemetry_out=args.telemetry_out, realtime=args.realtime)
         lat = snap["latency"]
         print(f"online: served {load.n_served}/{len(load.handles)} requests "
@@ -277,6 +301,12 @@ def main():
         stalls = snap["reduction_stalls"]
         print(f"reduction stalls: eager={stalls['eager_folds']} "
               f"deferred={stalls['deferred_folds']}")
+        disp = snap["dispatch"]
+        print(f"dispatch: {disp['dispatches']} launches "
+              f"({disp['merged_dispatches']} merged, "
+              f"{disp['batches_per_dispatch_mean']:.2f} batches/launch), "
+              f"M-occ {disp['m_occupancy_mean']:.3f} "
+              f"M-fill {disp['m_fill_mean']:.3f}")
         if args.telemetry_out:
             print(f"telemetry JSON → {args.telemetry_out}")
     else:

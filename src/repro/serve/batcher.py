@@ -17,6 +17,13 @@ and the paper's packing metrics apply unchanged.  With ``pad_rows`` (default)
 operands are padded with zero rows to the full ``N_c × d̂`` shape so every
 batch of a class hits the co-scheduler's compiled-program cache; zero rows
 transform to zero rows and are never routed back to any tenant.
+
+With ``pad_rows=False`` the batcher emits **mergeable** batches instead:
+operands carry live rows only, so the co-scheduler's M-axis super-batching
+can stack same-class batches densely (no interior padding rows) and its row
+ladder does the shape-stabilising padding once, on the merged operand.  The
+serving layer selects this mode automatically when its co-scheduler has a
+row ladder.
 """
 from __future__ import annotations
 

@@ -26,11 +26,12 @@ import time
 import jax.numpy as jnp
 
 from repro.core import validator as V
-from repro.core.scheduler.coscheduler import SliceCoScheduler
+from repro.core.scheduler.coscheduler import (SliceCoScheduler,
+                                              default_row_ladder)
 from repro.core.scheduler.rectangular import packing_metrics
 from repro.serve.admission import AdmissionController, AdmissionDecision
 from repro.serve.batcher import ClosedBatch, ContinuousBatcher
-from repro.serve.telemetry import BatchRecord, Telemetry
+from repro.serve.telemetry import BatchRecord, DispatchRecord, Telemetry
 
 PENDING, DONE, REJECTED = "pending", "done", "rejected"
 
@@ -118,9 +119,40 @@ class ServeConfig:
     d_tile: int | None = None
     # warm start: (workload, d_bucket) pairs to trace + compile at boot so the
     # first dispatch of each listed program triggers zero new XLA traces
-    # (shapes are N_c-row operands; requires pad_rows so live batches reuse
-    # them).  None skips warm start.
+    # (shapes are N_c-row operands; requires pad_rows — or a row ladder,
+    # whose rungs are all precompiled instead).  None skips warm start.
     warm_start: list | None = None
+    # dispatch fast path (all bit-for-bit neutral):
+    #   merge_dispatch — super-batch same-(workload, bucket) closed batches
+    #     along M into one tall launch;
+    #   row_ladder_max — pad launch heights up a geometric rung ladder
+    #     (8→16→…→row_ladder_max) so trace counts are bounded by the ladder
+    #     size; the batcher then emits live-row (mergeable) operands and the
+    #     co-scheduler pads once, on the merged operand.  None disables;
+    #   donate — donate operand buffers to the e2e programs (donate_argnums);
+    #   async_pipeline — zero-sync two-phase dispatch: launch now, gather at
+    #     the *next* serving event (pump/submit/drain), so the pump loop
+    #     never blocks on a device→host copy between launches.  Queued
+    #     batches that close while a launch is in flight merge into the next
+    #     one.  Latency telemetry then dates completions at the gathering
+    #     event's clock.
+    merge_dispatch: bool = True
+    row_ladder_max: int | None = None
+    donate: bool = False
+    async_pipeline: bool = False
+
+
+def coscheduler_from_config(cfg: ServeConfig,
+                            host: int | None = None) -> SliceCoScheduler:
+    """The default Tier-2 co-scheduler for a serving config (shared by the
+    single-host server and the per-host construction in repro.cluster)."""
+    ladder = (default_row_ladder(cfg.row_ladder_max)
+              if cfg.row_ladder_max else None)
+    return SliceCoScheduler(
+        accum=cfg.accum, reduction=cfg.reduction,
+        reduction_by_workload=cfg.reduction_by_workload,
+        kappa=cfg.kappa, d_tile=cfg.d_tile, merge=cfg.merge_dispatch,
+        row_ladder=ladder, donate=cfg.donate, host=host)
 
 
 class CryptoServer:
@@ -128,18 +160,23 @@ class CryptoServer:
                  coscheduler: SliceCoScheduler | None = None,
                  telemetry: Telemetry | None = None):
         self.config = cfg = config or ServeConfig()
+        self.cos = coscheduler or coscheduler_from_config(cfg)
+        # With a row ladder the batcher emits mergeable (live-row) operands
+        # and the co-scheduler pads once, on the merged operand — padding to
+        # N_c here as well would interleave dead rows into super-batches.
         self.batcher = ContinuousBatcher(
             n_c=cfg.n_c, bucket_granularity=cfg.bucket_granularity,
             max_age_s=cfg.max_age_s, occupancy_close=cfg.occupancy_close,
-            pad_rows=cfg.pad_rows)
+            pad_rows=cfg.pad_rows and self.cos.row_ladder is None)
         self.admission = AdmissionController(
             max_pending=cfg.max_pending, tenant_rate_hz=cfg.tenant_rate_hz,
             tenant_burst=cfg.tenant_burst, slo_deadline_s=cfg.slo_deadline_s)
-        self.cos = coscheduler or SliceCoScheduler(
-            accum=cfg.accum, reduction=cfg.reduction,
-            reduction_by_workload=cfg.reduction_by_workload,
-            kappa=cfg.kappa, d_tile=cfg.d_tile)
         self.telemetry = telemetry or Telemetry()
+        # Zero-sync pipeline state: batches validated + staged but not yet
+        # launched, and the single in-flight launch group awaiting gather.
+        self._staged: list[ClosedBatch] = []
+        # (closed, InflightDispatch, launch log, launch_s)
+        self._flight: tuple | None = None
         # Pending handles keyed by request identity: O(1) resolve, pruned on
         # completion (a long-lived server must not accumulate history), and
         # correct when one tenant has several rows in flight.
@@ -153,11 +190,12 @@ class CryptoServer:
         self.cluster_depth_fn = None
         self.warm_traces = 0
         if cfg.warm_start:
-            if not cfg.pad_rows:
+            if not cfg.pad_rows and self.cos.row_ladder is None:
                 raise ValueError(
-                    "warm_start requires pad_rows: unpadded batches stack "
-                    "row-count-dependent operand shapes, so pre-compiled "
-                    "N_c-row programs would never be reused")
+                    "warm_start requires pad_rows (or a row ladder): "
+                    "unpadded batches stack row-count-dependent operand "
+                    "shapes, so pre-compiled N_c-row programs would never "
+                    "be reused")
             self.warm_traces = self.cos.precompile(cfg.warm_start, cfg.n_c)
 
     # --- ingress --------------------------------------------------------------
@@ -196,7 +234,9 @@ class CryptoServer:
     # --- clock-driven flushing ------------------------------------------------
 
     def pump(self, now: float | None = None) -> int:
-        """Close and dispatch every age-expired batch; returns batches flushed."""
+        """Close and dispatch every age-expired batch; returns batches flushed.
+        Under the async pipeline this is also the gathering edge: any launch
+        left in flight by a previous event is materialised here."""
         now = time.monotonic() if now is None else now
         closed = self.batcher.poll(now)
         self._dispatch(closed, now)
@@ -224,44 +264,109 @@ class CryptoServer:
         now = time.monotonic() if now is None else now
         self.quiesce(now)
         closed = self.batcher.flush(now)
-        self._dispatch(closed, now)
+        self._dispatch(closed, now, final=True)
         return len(closed)
 
     # --- dispatch -------------------------------------------------------------
 
     def _validate_once(self, batch):
+        """Structurally validate the program in its dispatched form: twiddle
+        planes as device-resident arguments, operand donation when
+        configured, and — with merging on — the *maximal* super-batch height
+        (the merge cap), so V1–V7 are asserted on the tall merged module the
+        fast path actually runs, not a constant-baked per-batch stand-in.
+        One representative height per (workload, d_bucket) is validated; the
+        structural invariants are M-independent."""
         key = (batch.workload, batch.d_bucket)
         if key in self._validated:
             return
         eng = self.cos.engine_for(batch.workload, batch.d_bucket)
+        rows = (batch.operand.shape[0] if batch.operand is not None
+                else batch.n_c)
+        if self.cos.merge:
+            rows = max(rows, self.cos.merge_rows_max)
+        shape = self.cos.operand_shape(batch.workload, batch.d_bucket, rows)
+        args = (jnp.zeros(shape, jnp.uint32), eng.device_planes())
+        donate = (0,) if self.cos.donate else ()
+
+        def _e2e(operand, planes):
+            return eng.e2e(operand, planes=planes)
+
         if self.cos.reduction_for(batch.workload) == "eager":
-            rep = V.validate_fn(eng.e2e,
-                                jnp.zeros(batch.operand.shape, jnp.uint32),
-                                expected_passes=eng.n_passes)
+            rep = V.validate_fn(_e2e, *args, expected_passes=eng.n_passes,
+                                donate_argnums=donate)
         else:
             # κ-amortised program: per-pass V1/V2 don't apply; instead assert
             # exactly one deferred fold per window survived XLA (V6/V7).
-            rep = V.validate_fn(eng.e2e,
-                                jnp.zeros(batch.operand.shape, jnp.uint32),
-                                expect_eager=False,
+            rep = V.validate_fn(_e2e, *args, expect_eager=False,
                                 expected_windows=eng.fold_profile["n_folds"],
-                                n_diag=eng.n_diag)
+                                n_diag=eng.n_diag, donate_argnums=donate)
         rep.raise_if_failed()
         self._validated.add(key)
 
-    def _dispatch(self, closed: list[ClosedBatch], now: float):
-        if not closed:
-            return
+    def _dispatch(self, closed: list[ClosedBatch], now: float,
+                  final: bool = False):
+        """Stage newly closed batches and advance the dispatch pipeline.
+
+        Synchronous mode launches + gathers in place (one blocking edge per
+        serving event, as before).  Async mode launches now and defers the
+        gather to the next serving event, so the caller returns while the
+        device computes and the D2H copy streams; batches closed while a
+        launch is in flight merge into the next one (M-axis super-batching
+        fed by the pipeline itself).  ``final`` forces a full flush (drain).
+        """
         if self.config.validate:
             for cb in closed:
                 self._validate_once(cb.batch)
+        self._staged.extend(closed)
+        if not self.config.async_pipeline:
+            if self._staged:
+                staged, self._staged = self._staged, []
+                self._finish(staged, *self._launch(staged), now)
+            return
+        prev, self._flight = self._flight, None
+        if self._staged:
+            staged, self._staged = self._staged, []
+            self._flight = (staged, *self._launch(staged))
+        if prev is not None:
+            # Gather *after* the new launch is enqueued: the device starts
+            # the next group while the host materialises the previous one.
+            self._finish(*prev, now)
+        if final and self._flight is not None:
+            flight, self._flight = self._flight, None
+            self._finish(*flight, now)
+
+    def _launch(self, staged: list[ClosedBatch]):
         t0 = time.perf_counter()
-        results = self.cos.dispatch_mixed([cb.batch for cb in closed])
-        service_s = time.perf_counter() - t0
+        flight = self.cos.launch_mixed([cb.batch for cb in staged])
+        launch_s = time.perf_counter() - t0
+        # Claim the launch records now — a peer host sharing this
+        # co-scheduler may launch before we gather.
+        return flight, self.cos.drain_dispatch_log(), launch_s
+
+    def _finish(self, closed: list[ClosedBatch], flight, log: list,
+                launch_s: float, now: float):
+        # Service time = launch enqueue + blocking gather.  The async idle
+        # gap between the two events is deliberately excluded: feeding it to
+        # the admission EWMA would inflate the per-row service estimate by
+        # the event spacing and make the SLO gate reject load the slice can
+        # trivially carry.
+        t1 = time.perf_counter()
+        results = self.cos.gather(flight)
+        service_s = launch_s + time.perf_counter() - t1
         # Attribute wall time to batches by live-row share (one synchronised
         # launch group; per-batch device timing is not observable from here).
         total_rows = sum(cb.batch.n_c for cb in closed) or 1
         self.admission.observe_service(total_rows, service_s)
+        for entry in log:
+            live, launched = entry["live_rows"], entry["launched_rows"]
+            self.telemetry.record_dispatch(DispatchRecord(
+                workload=entry["workload"], d_bucket=entry["d_bucket"],
+                n_batches=entry["n_batches"], live_rows=live,
+                launched_rows=launched,
+                m_occupancy=min(1.0, live / self.config.n_c_max),
+                m_fill=live / launched if launched else 0.0,
+                donated=entry["donated"]))
         for cb, res in zip(closed, results):
             batch = cb.batch
             share = service_s * batch.n_c / total_rows

@@ -72,6 +72,26 @@ class LatencyHistogram:
 
 
 @dataclasses.dataclass(frozen=True)
+class DispatchRecord:
+    """One compiled-program launch (possibly several merged batches).
+
+    Where :class:`BatchRecord` carries the *planned* packing of one closed
+    batch, this carries the *achieved* M fill of what actually hit the
+    device after super-batching and row-ladder padding — the quantity
+    ``bench_serve``/``bench_dispatch`` track to show the recovered M
+    occupancy (paper §7: M collapses to 6.25% at N_c = 8 on v4).
+    """
+    workload: str
+    d_bucket: int
+    n_batches: int           # stacked batches merged into this launch
+    live_rows: int           # tenant rows (excludes ladder padding)
+    launched_rows: int       # operand height on the device (ladder rung)
+    m_occupancy: float       # live_rows / n_c_max — post-merge M occupancy
+    m_fill: float            # live_rows / launched_rows — ladder-pad density
+    donated: bool = False    # operand buffer donated to the program
+
+
+@dataclasses.dataclass(frozen=True)
 class BatchRecord:
     workload: str
     d_bucket: int
@@ -93,6 +113,7 @@ class Telemetry:
 
     def __init__(self):
         self.batches: list[BatchRecord] = []
+        self.dispatches: list[DispatchRecord] = []
         self.latency = LatencyHistogram()
         self.queue_wait = LatencyHistogram()
         self.admission_counts: dict[str, int] = {}
@@ -105,6 +126,9 @@ class Telemetry:
         self.batches.append(rec)
         self._queue_depth_sum += rec.queue_depth
         self._queue_depth_max = max(self._queue_depth_max, rec.queue_depth)
+
+    def record_dispatch(self, rec: DispatchRecord):
+        self.dispatches.append(rec)
 
     def record_admission(self, reason: str):
         self.admission_counts[reason] = self.admission_counts.get(reason, 0) + 1
@@ -146,6 +170,27 @@ class Telemetry:
             by = stalls["by_close_reason"].setdefault(
                 rec.close_reason, {"eager_folds": 0, "deferred_folds": 0})
             by[kind] += rec.n_folds
+        # Dispatch fast path: achieved per-launch M fill after merging +
+        # ladder padding (one DispatchRecord per compiled-program launch;
+        # several BatchRecords may map onto one of these).
+        n_d = len(self.dispatches)
+        live = sum(r.live_rows for r in self.dispatches)
+        launched = sum(r.launched_rows for r in self.dispatches)
+        dispatch = {
+            "dispatches": n_d,
+            "merged_dispatches": sum(1 for r in self.dispatches
+                                     if r.n_batches > 1),
+            "batches_per_dispatch_mean": (
+                sum(r.n_batches for r in self.dispatches) / n_d) if n_d else 0.0,
+            "live_rows": live,
+            "launched_rows": launched,
+            "pad_fraction": (1.0 - live / launched) if launched else 0.0,
+            "m_occupancy_mean": (sum(r.m_occupancy for r in self.dispatches)
+                                 / n_d) if n_d else 0.0,
+            "m_fill_mean": (sum(r.m_fill for r in self.dispatches) / n_d)
+                           if n_d else 0.0,
+            "donated": sum(1 for r in self.dispatches if r.donated),
+        }
         admitted = self.admission_counts.get("ok", 0)
         rejected = sum(v for k, v in self.admission_counts.items() if k != "ok")
         return {
@@ -160,6 +205,7 @@ class Telemetry:
             "service_s_total": sum(r.service_s for r in self.batches),
             "close_reasons": reasons,
             "reduction_stalls": stalls,
+            "dispatch": dispatch,
             "per_workload": per_workload,
             "latency": self.latency.summary(include_samples),
             "queue_wait": self.queue_wait.summary(include_samples),

@@ -1,0 +1,245 @@
+"""Dispatch fast path: super-batching, row-ladder retrace guard, zero-sync
+async serving, donation — all proven bit-for-bit neutral.
+
+The parity obligations here are the acceptance criteria of the fast-path PR:
+merged/padded dispatch must equal per-batch dispatch row-for-row for mixed
+eager/lazy classes, a 200-batch adversarially-heighted trace must trace at
+most ladder-size programs per (workload, d_bucket), and V1–V7 HLO validation
+must hold on the donated/merged program form actually dispatched.
+"""
+import numpy as np
+import pytest
+
+from repro.core import field as F
+from repro.core import workloads as WK
+from repro.core.scheduler import TenantRequest
+from repro.core.scheduler.coscheduler import (SliceCoScheduler,
+                                              default_row_ladder)
+from repro.core.scheduler.rectangular import StackedBatch, stack_rows
+from repro.launch.serve import serve_crypto, serve_crypto_online
+from repro.serve import CryptoServer, ServeConfig
+
+RNG = np.random.default_rng(7)
+
+LADDER = (4, 8, 16)      # small rungs keep CPU compile budget low; the
+                         # guard is about the *bound*, not the rung values
+
+
+def _dil_request(tid, d, t=0.0):
+    coeffs = np.asarray(RNG.integers(0, F.DILITHIUM_Q, d, dtype=np.uint64),
+                        np.uint32)
+    return TenantRequest(tid, "dilithium", d, t, coeffs)
+
+
+def _bn_request(tid, d=64, t=0.0):
+    eng = WK.make_engine("bn254", d)
+    vals = np.array([int(x) for x in RNG.integers(0, 2**31, d)], object)
+    return TenantRequest(tid, "bn254", d, t, np.asarray(eng.ingest(vals)))
+
+
+def _batch(reqs, d_bucket):
+    return StackedBatch(workload=reqs[0].workload, d_bucket=d_bucket,
+                        requests=reqs, operand=stack_rows(reqs, d_bucket))
+
+
+def _mixed_height_batches(n_batches, *, seed, d_buckets=(64, 128),
+                          max_rows=16, bn_every=0):
+    rng = np.random.default_rng(seed)
+    batches = []
+    for i in range(n_batches):
+        if bn_every and i % bn_every == bn_every - 1:
+            rows = int(rng.integers(1, 5))
+            reqs = [_bn_request(i * 100 + r) for r in range(rows)]
+            batches.append(_batch(reqs, 64))
+            continue
+        d = int(rng.choice(d_buckets))
+        rows = int(rng.integers(1, max_rows + 1))
+        reqs = [_dil_request(i * 100 + r, d) for r in range(rows)]
+        batches.append(_batch(reqs, d))
+    return batches
+
+
+# --- satellite: κ validated at construction ------------------------------------
+
+def test_kappa_rejected_at_construction_for_all_eager():
+    """An all-eager co-scheduler carrying κ>1 used to construct silently and
+    only fail (or record a bogus κ) deep in dispatch — now it fails here."""
+    with pytest.raises(ValueError, match="reduction='lazy'"):
+        SliceCoScheduler(kappa=4)
+    with pytest.raises(ValueError, match="reduction='lazy'"):
+        SliceCoScheduler(reduction_by_workload={"bn254": "eager"}, kappa=2)
+    # κ=1 and κ=None are degenerate-legal everywhere
+    SliceCoScheduler(kappa=1)
+    SliceCoScheduler(kappa=None)
+
+
+def test_kappa_scoped_to_lazy_classes_in_mixed_config():
+    """κ applies to the lazy classes only: the eager co-tenant's engine must
+    not inherit it (its staged_transform would refuse to trace)."""
+    cos = SliceCoScheduler(accum="int32_native", d_tile=171,
+                           reduction_by_workload={"dilithium": "lazy"},
+                           kappa=2)
+    eng_lazy = cos.engine_for("dilithium", 256)
+    eng_eager = cos.engine_for("bn254", 64)
+    assert eng_lazy.kappa == 2 and eng_lazy.reduction == "lazy"
+    assert eng_eager.kappa is None and eng_eager.reduction == "eager"
+    reqs = [_dil_request(i, 256) for i in range(2)]
+    res = cos.dispatch(_batch(reqs, 256))
+    for r in reqs:
+        np.testing.assert_array_equal(
+            res.outputs[r.tenant_id], eng_lazy.oracle_np(r.coeffs[None, :])[0])
+
+
+# --- row ladder ----------------------------------------------------------------
+
+def test_default_row_ladder_shape():
+    assert default_row_ladder(128) == (8, 16, 32, 64, 128)
+    assert default_row_ladder(16) == (8, 16)
+    assert default_row_ladder(100) == (8, 16, 32, 64, 100)
+    assert default_row_ladder(8) == (8,)
+    with pytest.raises(ValueError):
+        default_row_ladder(0)
+
+
+def test_launch_rows_snaps_to_rungs():
+    cos = SliceCoScheduler(row_ladder=LADDER)
+    assert [cos.launch_rows(n) for n in (1, 4, 5, 8, 9, 16)] == \
+        [4, 4, 8, 8, 16, 16]
+    assert cos.launch_rows(17) == 17      # beyond the top rung: natural size
+    plain = SliceCoScheduler()
+    assert plain.launch_rows(5) == 5
+
+
+def test_retrace_guard_200_mixed_height_batches():
+    """Acceptance: a 200-batch trace with adversarially varied heights traces
+    at most ladder-size programs per (workload, d_bucket)."""
+    batches = _mixed_height_batches(200, seed=3)
+    cos = SliceCoScheduler(merge=True, row_ladder=LADDER)
+    results = []
+    for lo in range(0, len(batches), 8):       # pump-loop-sized waves
+        results.extend(cos.dispatch_mixed(batches[lo:lo + 8]))
+    assert len(cos.trace_counts) == 2          # (dil, 64), (dil, 128)
+    for key, n in cos.trace_counts.items():
+        assert n <= len(LADDER), (key, n, cos.trace_counts)
+    # merging actually happened and every launch fits the top rung
+    log = cos.drain_dispatch_log()
+    assert any(e["n_batches"] > 1 for e in log)
+    assert all(e["launched_rows"] in LADDER or e["launched_rows"] <= LADDER[-1]
+               for e in log)
+    # row routing survived merging: spot-check tenants against the oracle
+    for res in results[::37]:
+        eng = cos.engine_for("dilithium", res.batch.d_bucket)
+        req = res.batch.requests[0]
+        np.testing.assert_array_equal(
+            res.outputs[req.tenant_id], eng.oracle_np(req.coeffs[None, :])[0])
+
+
+def test_merged_padded_dispatch_bitforbit_vs_per_batch_mixed_modes():
+    """Acceptance: merged + ladder-padded + donated dispatch is bit-for-bit
+    equal to per-batch dispatch for mixed eager/lazy classes."""
+    kw = dict(accum="int32_native", d_tile=171,
+              reduction_by_workload={"dilithium": "lazy"})
+    batches = _mixed_height_batches(24, seed=11, d_buckets=(256,),
+                                    max_rows=8, bn_every=4)
+    base = SliceCoScheduler(merge=False, **kw)
+    fast = SliceCoScheduler(merge=True, row_ladder=LADDER, donate=True, **kw)
+    base_res = [base.dispatch(b) for b in batches]
+    fast_res = fast.dispatch_mixed(batches)
+    for b, r0, r1 in zip(batches, base_res, fast_res):
+        assert r1.batch is b
+        np.testing.assert_array_equal(np.asarray(r0.rows[:b.n_c]),
+                                      np.asarray(r1.rows[:b.n_c]))
+    assert any(e["n_batches"] > 1 for e in fast.drain_dispatch_log())
+
+
+# --- serving integration --------------------------------------------------------
+
+def _serve_kw(seed):
+    return dict(duration_s=0.01, rate_hz=1024, seed=seed, d_uniform=256)
+
+
+def test_async_ladder_serving_matches_offline_bitforbit():
+    """Zero-sync pipeline + ladder + merge through the full online runtime:
+    per-tenant rows equal the offline replay, the ladder bounds traces, and
+    telemetry carries the per-dispatch M-fill records."""
+    kw = _serve_kw(23)
+    offline_results, n_ops, _ = serve_crypto(validate=False, **kw)
+    offline = {}
+    for res in offline_results:
+        offline.update(res.outputs)
+
+    load, snap, _ = serve_crypto_online(
+        max_age_s=0.002, validate=False, merge_dispatch=True,
+        row_ladder_max=16, async_pipeline=True, **kw)
+    assert set(load.outputs) == set(offline) and n_ops == len(offline)
+    for tid, row in offline.items():
+        np.testing.assert_array_equal(load.outputs[tid], row)
+    disp = snap["dispatch"]
+    assert disp["dispatches"] > 0
+    assert 0.0 < disp["m_fill_mean"] <= 1.0
+    assert disp["launched_rows"] >= disp["live_rows"] > 0
+    assert snap["requests_served"] == n_ops
+
+
+def test_online_ladder_bounds_traces_and_warm_start_covers_rungs():
+    """Warm-starting a laddered server precompiles every rung, so live
+    dispatches at adversarial heights trigger zero new traces."""
+    cfg = ServeConfig(n_c=8, max_age_s=10.0, validate=False,
+                      row_ladder_max=16, warm_start=[("dilithium", 64)])
+    server = CryptoServer(cfg)
+    ladder = server.cos.row_ladder
+    assert ladder == default_row_ladder(16)
+    assert server.warm_traces == len(ladder)
+    assert not server.batcher.pad_rows     # mergeable (live-row) emission
+    rng = np.random.default_rng(5)
+    now = 0.0
+    for i in range(40):                    # heights vary via age closes
+        for r in range(int(rng.integers(1, 6))):
+            server.submit(_dil_request(i * 10 + r, 64, now), now=now)
+        now += 0.02
+        server.pump(now)
+    server.drain(now + 1.0)
+    assert server.telemetry.snapshot()["requests_served"] > 0
+    assert server.cos.trace_counts[("dilithium", 64)] == len(ladder)
+
+
+def test_validator_passes_on_donated_merged_program():
+    """Acceptance: V1–V7 hold on the exact dispatched form — ladder-height
+    operand, device-resident plane arguments, donated operand buffer — for
+    both the eager and the κ-amortised discipline."""
+    cfg = ServeConfig(n_c=4, max_age_s=10.0, validate=True, donate=True,
+                      row_ladder_max=8, accum="int32_native", d_tile=171,
+                      reduction_by_workload={"dilithium": "lazy"}, kappa=2)
+    server = CryptoServer(cfg)
+    assert server.cos.donate
+    handles = [server.submit(_dil_request(i, 256), now=0.0) for i in range(3)]
+    handles.append(server.submit(_bn_request(77), now=0.0))
+    server.drain(0.001)
+    eng = server.cos.engine_for("dilithium", 256)
+    for h in handles[:3]:
+        np.testing.assert_array_equal(
+            h.result(), eng.oracle_np(h.request.coeffs[None, :])[0])
+    assert handles[3].done()
+    assert {("dilithium", 256), ("bn254", 64)} <= server._validated
+
+
+def test_async_pipeline_defers_gather_to_next_event():
+    """The pump loop's zero-sync contract: a closed batch launches without
+    resolving its handles; the next serving event gathers them."""
+    cfg = ServeConfig(n_c=2, max_age_s=10.0, validate=False,
+                      async_pipeline=True)
+    server = CryptoServer(cfg)
+    h1 = server.submit(_dil_request(0, 64), now=0.0)
+    h2 = server.submit(_dil_request(1, 64), now=0.0)   # closes full → launch
+    assert not h1.done() and not h2.done()             # in flight, not gathered
+    server.pump(0.005)                                 # gathering edge
+    assert h1.done() and h2.done()
+    eng = server.cos.engine_for("dilithium", 64)
+    iso = np.zeros((1, 64), np.uint32)
+    iso[0] = h1.request.coeffs
+    np.testing.assert_array_equal(h1.result(), eng.oracle_np(iso)[0])
+    # drain finalises anything still in flight
+    h3 = server.submit(_dil_request(2, 64), now=0.01)
+    h4 = server.submit(_dil_request(3, 64), now=0.01)
+    server.drain(0.02)
+    assert h3.done() and h4.done()
