@@ -15,6 +15,14 @@ a grid of fast-path configurations:
 * **async** on/off — two-phase launch → copy_to_host_async → gather with one
   launch group kept in flight.
 
+``--controller`` adds the closed-loop axis: the **drifting-rate ladder**
+drives the full serving stack (admission → continuous batcher → dispatch)
+with a piecewise-Poisson trace whose rate jumps across segments, once with
+the static close policy (the PR-4 fast path) and once with the adaptive
+occupancy controller + λ-holdback + depth-2 launch ring.  Both runs must be
+bit-for-bit equal per tenant (and a static re-run bounds the noise floor);
+the acceptance bar is adaptive ≥ 1.2× static rows/s.
+
 Every configuration is checked **bit-for-bit against the per-batch baseline**
 before its timing counts, and the trace counters are asserted against the
 ladder bound — throughput claims at unequal correctness are worthless.
@@ -22,7 +30,7 @@ Writes a ``BENCH_dispatch.json`` perf record via the shared helper in
 :mod:`benchmarks.common`.
 
   PYTHONPATH=src python benchmarks/bench_dispatch.py [--batches 200]
-      [--repeats 3] [--out BENCH_dispatch.json] [--dry-run]
+      [--repeats 3] [--out BENCH_dispatch.json] [--controller] [--dry-run]
 """
 from __future__ import annotations
 
@@ -41,6 +49,13 @@ from benchmarks.common import write_perf_record  # noqa: E402
 
 LADDER = (8, 16, 32, 64, 128)
 N_C = 8          # baseline pad target (the serve default)
+
+# Drifting-rate ladder (req/s per segment) for the closed-loop axis: a 16×
+# swing in offered load, so any single static tuning point is mistuned for
+# most of the trace.
+DRIFT_RATES = (512, 4096, 1024, 8192)
+DRIFT_SEG_S = 0.05
+ADAPTIVE_FLOOR = 1.2     # acceptance: adaptive ≥ 1.2× static rows/s
 
 
 def make_batches(n_batches: int, *, seed: int = 0, d_buckets=(64, 128),
@@ -187,7 +202,98 @@ def sweep(n_batches: int = 200, repeats: int = 3, seed: int = 0,
             "ladder": list(LADDER), "n_c": N_C, "points": points}
 
 
-def dry_run() -> dict:
+def controller_ladder(rates=DRIFT_RATES, seg_duration_s=DRIFT_SEG_S,
+                      repeats: int = 3, seed: int = 0,
+                      d_uniform: int = 64) -> dict:
+    """The closed-loop axis: static vs adaptive close policy over the
+    drifting-rate ladder, through the full online serving stack.
+
+    All runs share one pre-compiled co-scheduler (every ladder rung warmed)
+    so the timings measure the dispatch loop, not XLA compiles, and every
+    run's per-tenant outputs are asserted bit-for-bit equal before any
+    timing is recorded."""
+    from benchmarks.common import make_drifting_trace
+    from repro.core.scheduler.coscheduler import (SliceCoScheduler,
+                                                  default_row_ladder)
+    from repro.core.scheduler.rectangular import select_bucket
+    from repro.serve import CryptoServer, LoadGenerator, ServeConfig
+
+    ladder = default_row_ladder(LADDER[-1])
+    cos = SliceCoScheduler(merge=True, row_ladder=ladder)
+    d_bucket = select_bucket(d_uniform)
+    cos.precompile([("dilithium", d_bucket)], N_C)
+    base = dict(n_c=N_C, max_age_s=0.002, validate=False,
+                merge_dispatch=True, row_ladder_max=LADDER[-1],
+                async_pipeline=True)
+
+    def run_once(extra):
+        trace = make_drifting_trace(rates, seg_duration_s,
+                                    d_uniform=d_uniform, seed=seed)
+        server = CryptoServer(ServeConfig(**base, **extra), coscheduler=cos)
+        gen = LoadGenerator(trace, attach=False)
+        t0 = time.perf_counter()
+        load = gen.run(server)
+        dt = time.perf_counter() - t0
+        assert not load.rejected, "drift ladder must serve every request"
+        return load.outputs, dt, server.telemetry.snapshot()
+
+    def best_of(extra):
+        outputs = best_dt = snap = None
+        for _ in range(repeats):
+            out, dt, s = run_once(extra)
+            if best_dt is None or dt < best_dt:
+                outputs, best_dt, snap = out, dt, s
+        return outputs, best_dt, snap
+
+    adaptive_cfg = dict(controller=True, holdback_lambda=1.5,
+                        inflight_depth=2)
+    static_out, static_s, static_snap = best_of({})
+    rerun_out, rerun_s, rerun_snap = best_of({})
+    adapt_out, adapt_s, adapt_snap = best_of(adaptive_cfg)
+
+    # Replay parity: the closed loop may only change grouping and timing,
+    # never a single tenant's bits.
+    assert set(adapt_out) == set(static_out) == set(rerun_out)
+    for tid, row in static_out.items():
+        if not (np.array_equal(row, adapt_out[tid])
+                and np.array_equal(row, rerun_out[tid])):
+            raise AssertionError(
+                f"controller serving diverged from the static fast path at "
+                f"tenant {tid} — refusing to record its timing")
+
+    rows = len(static_out)
+
+    def point(config, wall_s, snap, **extra):
+        disp = snap["dispatch"]
+        return {
+            "config": config, "axis": "controller-drift",
+            "rates": list(rates), "seg_duration_s": seg_duration_s,
+            "rows": rows, "wall_s": wall_s, "rows_per_s": rows / wall_s,
+            "dispatches": disp["dispatches"],
+            "dispatch_m_occupancy_mean": disp["m_occupancy_mean"],
+            "dispatch_m_fill_mean": disp["m_fill_mean"],
+            "bitexact_vs_static": True, **extra,
+        }
+
+    ctl = adapt_snap["controller"]
+    points = [
+        point("drift-static", static_s, static_snap, controller=False),
+        point("drift-static-rerun", rerun_s, rerun_snap, controller=False,
+              noise_vs_static=rerun_s / static_s),
+        point("drift-adaptive", adapt_s, adapt_snap, controller=True,
+              holdback_lambda=adaptive_cfg["holdback_lambda"],
+              inflight_depth=adaptive_cfg["inflight_depth"],
+              speedup_vs_static=static_s / adapt_s,
+              controller_updates=ctl["updates"],
+              target_rows={k: c["target_rows"]
+                           for k, c in ctl["classes"].items()},
+              holdback=adapt_snap["holdback"]),
+    ]
+    return {"rates": list(rates), "seg_duration_s": seg_duration_s,
+            "rows": rows, "points": points}
+
+
+def dry_run(controller: bool = False) -> dict:
     """CI smoke: tiny stream, parity + retrace-guard asserts, no timing
     claims (CI wall clocks are noise)."""
     doc = sweep(n_batches=12, repeats=1)
@@ -195,6 +301,14 @@ def dry_run() -> dict:
                 if p["merge"] and p["ladder"] and p["async"])
     assert full["bitexact_vs_baseline"]
     assert all(n <= len(LADDER) for n in full["trace_counts"].values()), doc
+    if controller:
+        cdoc = controller_ladder(rates=(256, 2048), seg_duration_s=0.02,
+                                 repeats=1)
+        adapt = next(p for p in cdoc["points"]
+                     if p["config"] == "drift-adaptive")
+        assert adapt["bitexact_vs_static"]
+        assert adapt["controller_updates"] > 0, adapt
+        doc["controller_dry"] = cdoc
     return doc
 
 
@@ -205,31 +319,60 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--with-bn254", action="store_true",
                     help="mix BN254 batches into the stream (slower)")
+    ap.add_argument("--controller", action="store_true",
+                    help="also run the closed-loop axis: static vs adaptive "
+                         "close policy over the drifting-rate ladder")
     ap.add_argument("--out", default="BENCH_dispatch.json")
     ap.add_argument("--dry-run", action="store_true",
                     help="tiny stream + parity/retrace asserts (CI)")
     args = ap.parse_args()
 
     if args.dry_run:
-        doc = dry_run()
-        full = doc["points"][-1]
+        doc = dry_run(controller=args.controller)
+        full = next(p for p in doc["points"]
+                    if p["merge"] and p["ladder"] and p["async"])
         print(f"dry run ok: {len(doc['points'])} configs bit-exact, "
               f"traces bounded by ladder({len(doc['ladder'])}); "
               f"merge+ladder+donate+async speedup {full['speedup']:.2f}x "
               f"(untracked — timing asserts are for full runs)")
+        if args.controller:
+            adapt = next(p for p in doc["controller_dry"]["points"]
+                         if p["config"] == "drift-adaptive")
+            print(f"controller dry ok: adaptive bit-exact vs static, "
+                  f"{adapt['controller_updates']} control updates, "
+                  f"target rungs {adapt['target_rows']}")
         return
 
     doc = sweep(args.batches, args.repeats, seed=args.seed,
                 with_bn254=args.with_bn254)
+    if args.controller:
+        cdoc = controller_ladder(repeats=args.repeats, seed=args.seed)
+        doc["points"].extend(cdoc["points"])
+        doc["controller_ladder"] = {k: v for k, v in cdoc.items()
+                                    if k != "points"}
     record = write_perf_record(
         args.out, "dispatch",
         doc["points"], meta={k: v for k, v in doc.items() if k != "points"})
     for p in doc["points"]:
+        ratio = p.get("speedup", p.get("speedup_vs_static",
+                                       p.get("noise_vs_static", 1.0)))
         print(f"{p['config']:<28} {p['wall_s']*1e3:8.1f} ms "
-              f"{p['rows_per_s']:10.0f} rows/s  {p['speedup']:.2f}x")
-    full = doc["points"][-1]
+              f"{p['rows_per_s']:10.0f} rows/s  {ratio:.2f}x")
+    full = next(p for p in doc["points"]
+                if p.get("merge") and p.get("ladder") and p.get("async"))
     print(f"\nmerge+async speedup over per-batch: {full['speedup']:.2f}x "
           f"(acceptance floor 1.3x); wrote {args.out}")
+    if args.controller:
+        adapt = next(p for p in doc["points"]
+                     if p["config"] == "drift-adaptive")
+        print(f"adaptive vs static on the drifting-rate ladder: "
+              f"{adapt['speedup_vs_static']:.2f}x "
+              f"(acceptance floor {ADAPTIVE_FLOOR}x)")
+        if adapt["speedup_vs_static"] < ADAPTIVE_FLOOR:
+            raise AssertionError(
+                f"adaptive {adapt['speedup_vs_static']:.2f}x < "
+                f"{ADAPTIVE_FLOOR}x acceptance floor on the drifting-rate "
+                f"ladder")
     print(json.dumps(record["env"], sort_keys=True))
 
 

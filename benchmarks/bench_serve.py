@@ -8,6 +8,7 @@ the latency knee sits relative to the occupancy the batcher can sustain.
 
   PYTHONPATH=src python benchmarks/bench_serve.py [--rates 512,1024,2048]
       [--duration 0.02] [--out bench_serve.json]
+      [--controller [--holdback-lambda 1.5] [--inflight-depth 2]]
 
 Also exposes ``run()`` yielding the aggregator's CSV rows.
 """
@@ -26,7 +27,8 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 def sweep(rates=(512, 1024, 2048), *, duration_s=0.02, n_c=8,
           max_age_s=0.005, d_uniform=256, seed=0, merge_dispatch=True,
           row_ladder_max=None, donate=False,
-          async_pipeline=False) -> list[dict]:
+          async_pipeline=False, controller=False, holdback_lambda=0.0,
+          inflight_depth=1) -> list[dict]:
     from repro.launch.serve import serve_crypto_online
 
     points = []
@@ -37,6 +39,8 @@ def sweep(rates=(512, 1024, 2048), *, duration_s=0.02, n_c=8,
             max_age_s=max_age_s, d_uniform=d_uniform, seed=seed,
             merge_dispatch=merge_dispatch, row_ladder_max=row_ladder_max,
             donate=donate, async_pipeline=async_pipeline,
+            controller=controller, holdback_lambda=holdback_lambda,
+            inflight_depth=inflight_depth,
             validate=False)      # HLO validation is tested elsewhere; this
                                  # sweep measures the serving path itself
         lat = snap["latency"]
@@ -48,7 +52,10 @@ def sweep(rates=(512, 1024, 2048), *, duration_s=0.02, n_c=8,
             "max_age_s": max_age_s,
             "fast_path": {"merge": merge_dispatch,
                           "row_ladder_max": row_ladder_max,
-                          "donate": donate, "async": async_pipeline},
+                          "donate": donate, "async": async_pipeline,
+                          "controller": controller,
+                          "holdback_lambda": holdback_lambda,
+                          "inflight_depth": inflight_depth},
             "wall_s": dt,
             "served": load.n_served,
             "rejected": len(load.rejected),
@@ -63,6 +70,9 @@ def sweep(rates=(512, 1024, 2048), *, duration_s=0.02, n_c=8,
             "batches_per_dispatch_mean": disp["batches_per_dispatch_mean"],
             "dispatch_m_occupancy_mean": disp["m_occupancy_mean"],
             "dispatch_m_fill_mean": disp["m_fill_mean"],
+            "holdback": snap.get("holdback"),
+            "controller_updates": (snap["controller"]["updates"]
+                                   if controller else 0),
             "queue_depth_mean": snap["queue_depth_mean"],
             "queue_depth_max": snap["queue_depth_max"],
             "p50_s": lat["p50_s"], "p95_s": lat["p95_s"],
@@ -98,6 +108,11 @@ def main():
     ap.add_argument("--row-ladder-max", type=int, default=None)
     ap.add_argument("--donate", action="store_true")
     ap.add_argument("--async-pipeline", action="store_true")
+    ap.add_argument("--controller", action="store_true",
+                    help="closed-loop close policy (adaptive occupancy "
+                         "controller) instead of the static config")
+    ap.add_argument("--holdback-lambda", type=float, default=0.0)
+    ap.add_argument("--inflight-depth", type=int, default=1)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -108,7 +123,10 @@ def main():
                    max_age_s=args.max_age_ms / 1e3, d_uniform=args.d_uniform,
                    merge_dispatch=not args.no_merge,
                    row_ladder_max=args.row_ladder_max, donate=args.donate,
-                   async_pipeline=args.async_pipeline)
+                   async_pipeline=args.async_pipeline,
+                   controller=args.controller,
+                   holdback_lambda=args.holdback_lambda,
+                   inflight_depth=args.inflight_depth)
     doc = perf_record("serve_online", points)
     text = json.dumps(doc, indent=2, sort_keys=True)
     if args.out:

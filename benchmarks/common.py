@@ -113,6 +113,40 @@ def make_trace(rate_hz: float, duration_s: float, *, d_uniform: int | None = Non
     return trace
 
 
+def make_drifting_trace(rates, seg_duration_s: float, *,
+                        d_uniform: int | None = 64, seed: int = 0,
+                        workload: str = "dilithium",
+                        accum: str = "fp32_mantissa") -> list:
+    """Piecewise-Poisson trace whose rate *drifts* across segments — the
+    harness for the closed-loop controller benchmarks.
+
+    Each entry of ``rates`` owns one ``seg_duration_s``-long segment; a
+    static close policy tuned for any one segment is mistuned for the
+    others, which is exactly the regime the adaptive controller is supposed
+    to survive.  Tenant ids are re-assigned sequentially across the whole
+    trace (unique per request) so per-tenant output maps are directly
+    comparable across serving configurations, and payloads are attached
+    once, in arrival order, from one rng stream — two calls with the same
+    arguments produce byte-identical traces.
+    """
+    from repro.core.scheduler import PoissonTrace
+    from repro.serve.client import attach_payloads
+
+    trace, t0 = [], 0.0
+    for i, rate in enumerate(rates):
+        seg = PoissonTrace(rate_hz=float(rate), duration_s=seg_duration_s,
+                           uniform_degree=d_uniform, seed=seed + i,
+                           mixture=((workload, 1.0),)).generate()
+        for r in seg:
+            r.arrival_time += t0
+        trace.extend(seg)
+        t0 += seg_duration_s
+    for i, r in enumerate(trace):
+        r.tenant_id = i
+    attach_payloads(trace, seed=seed, accum=accum)
+    return trace
+
+
 # --- Recorded constants from the paper (GPU baselines + cloud pricing) --------
 # These are *external reference points* (paper §7.1, Table 2) — the deficit
 # reproduction is derived arithmetic over them + our measured structure.

@@ -1,12 +1,187 @@
-"""Before/after diff of tagged §Perf artifacts vs baselines."""
-import glob
+"""Perf-trajectory tooling: diff ``BENCH_*.json`` records across commits.
+
+The repo's benchmarks all emit the same record envelope
+(:func:`benchmarks.common.perf_record`): an ``env`` stamp plus a list of
+measurement points keyed by ``config``.  This script compares a freshly
+measured candidate record against a baseline — by default the committed
+record at a git revision — and reports per-config ``rows_per_s`` deltas:
+
+  PYTHONPATH=src python scripts/perf_report.py --bench dispatch \
+      --candidate fresh.json [--baseline PATH | --baseline-rev HEAD] \
+      [--fail-threshold 0.2] [--dry-run]
+
+Exit status is the CI contract: a regression beyond ``--fail-threshold`` on
+*comparable environments* exits 1.  When the environments differ (different
+backend / jax / machine — the usual case on a CI runner diffing a record
+measured elsewhere) every regression is downgraded to a warning, because a
+rows/s delta across machines is noise, not signal; the env mismatch itself
+is printed loudly.  ``--dry-run`` additionally tolerates a missing
+candidate or baseline (schema-checks whatever exists and exits 0), so the
+CI step stays green on branches that haven't regenerated records — but a
+measured regression on a comparable env still fails, dry or not.
+
+The original §Perf artifact report (roofline deltas over
+``artifacts/dryrun``) is kept behind ``--legacy-artifacts``.
+"""
+from __future__ import annotations
+
+import argparse
 import json
 import os
+import subprocess
 import sys
 
-ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                   "artifacts", "dryrun")
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ART = os.path.join(REPO, "artifacts", "dryrun")
 
+# env keys that must all match for cross-record timing deltas to be signal
+ENV_KEYS = ("backend", "device_count", "jax", "platform", "python")
+
+
+# --- BENCH_* record diffing ---------------------------------------------------
+
+def load_record(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    check_record(doc, path)
+    return doc
+
+
+def load_committed_record(bench: str, rev: str = "HEAD") -> dict | None:
+    """The committed ``BENCH_<bench>.json`` at a git revision (None when the
+    revision predates the record)."""
+    name = f"BENCH_{bench}.json"
+    try:
+        text = subprocess.run(
+            ["git", "show", f"{rev}:{name}"], cwd=REPO, capture_output=True,
+            text=True, check=True).stdout
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        return None
+    doc = json.loads(text)
+    check_record(doc, f"{rev}:{name}")
+    return doc
+
+
+def check_record(doc: dict, origin: str):
+    """Schema guard: every record must carry the shared envelope."""
+    for key in ("bench", "schema", "env", "points"):
+        if key not in doc:
+            raise ValueError(f"{origin}: not a perf record — missing {key!r}")
+    if not isinstance(doc["points"], list):
+        raise ValueError(f"{origin}: points must be a list")
+
+
+def env_mismatch(base: dict, cand: dict) -> dict:
+    """Differing env keys: {key: (baseline value, candidate value)}."""
+    out = {}
+    for key in ENV_KEYS:
+        b, c = base["env"].get(key), cand["env"].get(key)
+        if b != c:
+            out[key] = (b, c)
+    return out
+
+
+def diff_records(base: dict, cand: dict, threshold: float = 0.2) -> dict:
+    """Per-config rows/s deltas + the regression verdict.
+
+    ``delta`` is the candidate's fractional change (+0.10 = 10 % faster);
+    a config is a regression when it slowed by more than ``threshold``.
+    Configs present on only one side are reported, never failed — a new
+    benchmark axis must not masquerade as a regression.
+    """
+    if base["bench"] != cand["bench"]:
+        raise ValueError(f"comparing different benches: "
+                         f"{base['bench']!r} vs {cand['bench']!r}")
+    base_pts = {p["config"]: p for p in base["points"] if "rows_per_s" in p}
+    cand_pts = {p["config"]: p for p in cand["points"] if "rows_per_s" in p}
+    rows, regressions = [], []
+    for config in base_pts:
+        bp = base_pts[config]
+        cp = cand_pts.get(config)
+        if cp is None:
+            rows.append({"config": config, "status": "missing-in-candidate",
+                         "base_rows_per_s": bp["rows_per_s"]})
+            continue
+        delta = cp["rows_per_s"] / bp["rows_per_s"] - 1.0
+        row = {"config": config, "status": "ok",
+               "base_rows_per_s": bp["rows_per_s"],
+               "cand_rows_per_s": cp["rows_per_s"], "delta": delta}
+        if delta < -threshold:
+            row["status"] = "regression"
+            regressions.append(row)
+        rows.append(row)
+    for config in cand_pts.keys() - base_pts.keys():
+        rows.append({"config": config, "status": "new-in-candidate",
+                     "cand_rows_per_s": cand_pts[config]["rows_per_s"]})
+    return {"bench": base["bench"], "threshold": threshold,
+            "env_mismatch": env_mismatch(base, cand),
+            "per_config": rows, "regressions": regressions}
+
+
+def print_diff(report: dict):
+    print(f"=== BENCH_{report['bench']} "
+          f"(fail threshold {report['threshold']:.0%}) ===")
+    for key, (b, c) in report["env_mismatch"].items():
+        print(f"  WARNING env mismatch {key}: baseline={b!r} "
+              f"candidate={c!r} — timing deltas are cross-machine noise")
+    for row in sorted(report["per_config"], key=lambda r: r["config"]):
+        if row["status"] == "missing-in-candidate":
+            print(f"  {row['config']:<28} missing in candidate "
+                  f"(baseline {row['base_rows_per_s']:.0f} rows/s)")
+        elif row["status"] == "new-in-candidate":
+            print(f"  {row['config']:<28} new config "
+                  f"({row['cand_rows_per_s']:.0f} rows/s)")
+        else:
+            marker = "  REGRESSION" if row["status"] == "regression" else ""
+            print(f"  {row['config']:<28} {row['base_rows_per_s']:10.0f} → "
+                  f"{row['cand_rows_per_s']:10.0f} rows/s "
+                  f"({row['delta']:+.1%}){marker}")
+
+
+def run_bench_diff(args) -> int:
+    if args.baseline:
+        if not os.path.exists(args.baseline):
+            msg = f"baseline record {args.baseline} does not exist"
+            if args.dry_run:
+                print(f"{msg} — nothing to diff (dry run: ok)")
+                return 0
+            print(msg, file=sys.stderr)
+            return 2
+        base = load_record(args.baseline)
+    else:
+        base = load_committed_record(args.bench, args.baseline_rev)
+        if base is None:
+            msg = (f"no committed BENCH_{args.bench}.json at "
+                   f"{args.baseline_rev}")
+            if args.dry_run:
+                print(f"{msg} — nothing to diff (dry run: ok)")
+                return 0
+            print(msg, file=sys.stderr)
+            return 2
+    if not os.path.exists(args.candidate):
+        msg = f"candidate record {args.candidate} does not exist"
+        if args.dry_run:
+            print(f"{msg} — nothing to diff (dry run: ok)")
+            return 0
+        print(msg, file=sys.stderr)
+        return 2
+    report = diff_records(base, load_record(args.candidate),
+                          threshold=args.fail_threshold)
+    print_diff(report)
+    if report["regressions"]:
+        if report["env_mismatch"]:
+            print(f"{len(report['regressions'])} config(s) slowed past the "
+                  f"threshold, but the environments differ — treating as "
+                  f"noise, not failing")
+            return 0
+        print(f"FAIL: {len(report['regressions'])} config(s) regressed "
+              f"past {report['threshold']:.0%} on a comparable environment")
+        return 1
+    print("no regressions past the threshold")
+    return 0
+
+
+# --- legacy §Perf artifact report ---------------------------------------------
 
 def load(arch, shape, mesh="single", tag=""):
     suffix = f"_{tag}" if tag else ""
@@ -44,7 +219,7 @@ def report(arch, shape, tags, mesh="single"):
               f"[dominant-term x{improve:.2f}]")
 
 
-if __name__ == "__main__":
+def legacy_artifacts():
     report("aegis_bn254", "serve_256", ["scan", "lazy_int32"])
     report("aegis_bn254", "serve_8k", ["scan"])
     report("llama3_405b", "decode_32k", ["gqa_grouped"])
@@ -52,3 +227,39 @@ if __name__ == "__main__":
            ["moe_replicate", "moe_replicate_gqa"])
     report("llama3_405b", "train_4k", ["remat_nothing", "gqa_grouped"])
     report("internlm2_20b", "decode_32k", ["gqa_grouped"])
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", default=None,
+                    help="BENCH record name to diff, e.g. 'dispatch'")
+    ap.add_argument("--candidate", default=None,
+                    help="freshly measured record (JSON path)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline record path (default: the committed "
+                         "record at --baseline-rev)")
+    ap.add_argument("--baseline-rev", default="HEAD",
+                    help="git revision holding the committed baseline")
+    ap.add_argument("--fail-threshold", type=float, default=0.2,
+                    help="fail when any config slows by more than this "
+                         "fraction (comparable envs only)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tolerate missing records (CI-safe); measured "
+                         "regressions on comparable envs still fail")
+    ap.add_argument("--legacy-artifacts", action="store_true",
+                    help="print the §Perf roofline artifact report instead")
+    args = ap.parse_args()
+
+    if args.bench is None and args.candidate is not None:
+        ap.error("--candidate needs --bench (which BENCH record to diff); "
+                 "refusing to silently fall back to the artifact report")
+    if args.legacy_artifacts or args.bench is None:
+        legacy_artifacts()
+        return 0
+    if args.candidate is None:
+        ap.error("--bench needs --candidate (the fresh record to compare)")
+    return run_bench_diff(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

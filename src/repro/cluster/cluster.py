@@ -6,9 +6,17 @@ simulated host slices, each owning its own
 engines, compiled-program cache, and device-group assignment):
 
     submit ──▶ tenant-hash router ──▶ host h: admission ──▶ batcher ──▶
-                    │                      ▲                 dispatch
-                    │                      │ per-host-equivalent cluster
-                    └── gossip bus ────────┘ depth (bounded staleness)
+                    │                      ▲       ▲         dispatch
+                    │                      │       │ adaptive controller
+                    │                      │       │ (close policy setpoint)
+                    └── gossip bus ────────┴───────┘ per-host-equivalent
+                        cluster depth (bounded staleness)
+
+With ``ServeConfig.controller`` each host runs its own adaptive occupancy
+controller, but the gossiped per-host-equivalent cluster depth folds into
+every host's setpoint: a host whose local queue looks shallow still raises
+its target rung when the fleet is deep, because merge partners routed to it
+are already en route.
 
 The cluster exposes the same explicit-clock surface as a single server
 (``submit(req, now)`` / ``pump(now)`` / ``next_deadline()`` /
@@ -122,11 +130,16 @@ class ClusterServer:
         self._barrier = {"quiesced_at": now,
                          "hosts": len(self.hosts),
                          "complete": False}
-        # Phase 2 — drain: flush every host's open batches.
+        # Phase 2 — drain: flush every host's open batches, holdback pens,
+        # and launch rings (depth-k flights are retired inside srv.drain).
         flushed = sum(srv.drain(now) for srv in self.hosts)
-        # Phase 3 — collect: the barrier record lands in telemetry.
-        self._barrier.update(drained_at=now, batches_flushed=flushed,
-                             complete=True)
+        # Phase 3 — collect: the barrier record lands in telemetry.  The
+        # in-flight census is the ring-drain audit — a complete barrier must
+        # leave zero launch groups outstanding on any host.
+        self._barrier.update(
+            drained_at=now, batches_flushed=flushed,
+            inflight_groups=sum(srv.inflight_groups for srv in self.hosts),
+            complete=True)
         return flushed
 
     @property

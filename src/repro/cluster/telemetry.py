@@ -116,6 +116,50 @@ def _merge_dispatch(snaps: list[dict]) -> dict:
     return out
 
 
+def _merge_holdback(snaps: list[dict]) -> dict:
+    """Merge the per-host λ-holdback audits: event counters and held rows
+    sum, the realised hold durations keep their fleet-wide max and total.
+    Hosts predating the section contribute nothing."""
+    out = {"held": 0, "wins": 0, "losses": 0, "flushed": 0,
+           "held_rows": 0, "hold_s_sum": 0.0, "hold_s_max": 0.0}
+    for snap in snaps:
+        h = snap.get("holdback")
+        if not h:
+            continue
+        for k in ("held", "wins", "losses", "flushed", "held_rows",
+                  "hold_s_sum"):
+            out[k] += h.get(k, 0)
+        out["hold_s_max"] = max(out["hold_s_max"], h.get("hold_s_max", 0.0))
+    return out
+
+
+def _merge_controller(snaps: list[dict]) -> dict | None:
+    """Fleet summary of the per-host adaptive controllers (None when no host
+    runs one).  Setpoints are host-local by design — each host's loop reacts
+    to its own slice — so the merge reports the update-weighted fleet means
+    and extrema, not a single merged setpoint."""
+    parts = [s.get("controller") for s in snaps]
+    parts = [p for p in parts if p]
+    if not parts:
+        return None
+    updates = [p.get("updates", 0) for p in parts]
+    class_states = [c for p in parts for c in p.get("classes", {}).values()]
+    weights = [c.get("updates", 0) for c in class_states]
+    return {
+        "hosts": len(parts),
+        "updates": sum(updates),
+        "cluster_depth_max": max(p.get("cluster_depth_max", 0.0)
+                                 for p in parts),
+        "m_occupancy_ewma_mean": _weighted_mean(
+            [(c.get("m_occupancy_ewma", 0.0), w)
+             for c, w in zip(class_states, weights)]),
+        "target_rows_max": max((c.get("target_rows", 0)
+                                for c in class_states), default=0),
+        "max_age_s_max": max((c.get("max_age_s", 0.0)
+                              for c in class_states), default=0.0),
+    }
+
+
 def _merge_reduction_stalls(snaps: list[dict]) -> dict:
     out = {"eager_folds": 0, "deferred_folds": 0, "by_close_reason": {}}
     for snap in snaps:
@@ -175,6 +219,7 @@ def merge_snapshots(snaps: list[dict]) -> dict:
                                               for s in snaps),
         "reduction_stalls": _merge_reduction_stalls(snaps),
         "dispatch": _merge_dispatch(snaps),
+        "holdback": _merge_holdback(snaps),
         "per_workload": _merge_per_workload(snaps),
         "latency": _merge_histograms([s["latency"] for s in snaps]),
         "queue_wait": _merge_histograms([s["queue_wait"] for s in snaps]),
@@ -187,4 +232,7 @@ def merge_snapshots(snaps: list[dict]) -> dict:
             [s["requests_served"] for s in snaps]),
         "n_hosts": len(snaps),
     }
+    controller = _merge_controller(snaps)
+    if controller is not None:
+        merged["controller"] = controller
     return merged

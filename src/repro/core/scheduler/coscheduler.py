@@ -51,6 +51,43 @@ from repro.core.scheduler.rectangular import StackedBatch, merge_operands
 # let old entries fall off).
 DISPATCH_LOG_MAX = 4096
 
+# Minimum legal row-ladder rung.  A rung below the systolic M-tile height
+# compiles a program whose operand cannot be split across a device group
+# (and on real slices wastes a full sublane tile per launch); historically a
+# sub-tile or shuffled ladder only surfaced later as a confusing
+# launch-shape error inside XLA — now it is rejected at construction.
+MIN_ROW_TILE = 2
+
+
+def validate_row_ladder(row_ladder) -> tuple[int, ...]:
+    """Validate a compile-cache rung ladder at construction time.
+
+    Rungs must be unique, strictly increasing, and at least
+    ``MIN_ROW_TILE`` tall; anything else raises a ``ValueError`` naming the
+    offending rung instead of letting a mis-shaped ladder reach dispatch.
+    """
+    ladder = tuple(int(r) for r in row_ladder)
+    if not ladder:
+        raise ValueError("row_ladder must name at least one rung")
+    low = [r for r in ladder if r < MIN_ROW_TILE]
+    if low:
+        raise ValueError(
+            f"row_ladder rungs must be ≥ {MIN_ROW_TILE} (the minimum M-tile "
+            f"height): got {low} in {ladder}")
+    for prev, cur in zip(ladder, ladder[1:]):
+        if cur == prev:
+            raise ValueError(
+                f"row_ladder has a duplicate rung {cur} in {ladder}: each "
+                f"rung is one compiled program — duplicates would double-"
+                f"count the trace budget")
+        if cur < prev:
+            raise ValueError(
+                f"row_ladder must be strictly increasing, got {cur} after "
+                f"{prev} in {ladder}: launch_rows snaps a height to the "
+                f"first rung that fits, so a shuffled ladder launches at "
+                f"the wrong height")
+    return ladder
+
 
 def default_row_ladder(n_max: int, n_min: int = 8) -> tuple[int, ...]:
     """Geometric rung set ``n_min, 2·n_min, … ≥ n_max`` (the compile-cache
@@ -138,10 +175,7 @@ class SliceCoScheduler:
         self.d_tile = d_tile
         self.merge = merge
         if row_ladder is not None:
-            row_ladder = tuple(sorted(row_ladder))
-            if not row_ladder or row_ladder[0] < 1:
-                raise ValueError(f"row_ladder rungs must be positive, got "
-                                 f"{row_ladder}")
+            row_ladder = validate_row_ladder(row_ladder)
         self.row_ladder = row_ladder
         self.merge_rows_max = (row_ladder[-1] if row_ladder
                                else merge_rows_max)

@@ -97,6 +97,8 @@ def serve_crypto_online(*, duration_s=0.05, rate_hz=2048, n_c=8,
                         slo_deadline_s=None, occupancy_close=None,
                         merge_dispatch=True, row_ladder_max=None,
                         donate=False, async_pipeline=False, warm_start=None,
+                        controller=False, holdback_lambda=0.0,
+                        inflight_depth=1, compilation_cache_dir=None,
                         telemetry_out=None, realtime=False, coscheduler=None):
     """Closed loop over the online runtime: load generator → admission →
     continuous batcher → co-scheduled dispatch → per-tenant results."""
@@ -113,7 +115,11 @@ def serve_crypto_online(*, duration_s=0.05, rate_hz=2048, n_c=8,
                       occupancy_close=occupancy_close,
                       merge_dispatch=merge_dispatch,
                       row_ladder_max=row_ladder_max, donate=donate,
-                      async_pipeline=async_pipeline, warm_start=warm_start)
+                      async_pipeline=async_pipeline, warm_start=warm_start,
+                      controller=controller,
+                      holdback_lambda=holdback_lambda,
+                      inflight_depth=inflight_depth,
+                      compilation_cache_dir=compilation_cache_dir)
     server = CryptoServer(cfg, coscheduler=coscheduler)
     gen = LoadGenerator(PoissonTrace(rate_hz=rate_hz, duration_s=duration_s,
                                      uniform_degree=d_uniform, seed=seed),
@@ -136,7 +142,10 @@ def serve_crypto_cluster(*, hosts=2, duration_s=0.05, rate_hz=2048, n_c=8,
                          gossip_staleness_factor=2.0, pinned=None,
                          merge_dispatch=True, row_ladder_max=None,
                          donate=False, async_pipeline=False,
-                         warm_start=None, telemetry_out=None, trace=None,
+                         warm_start=None, controller=False,
+                         holdback_lambda=0.0, inflight_depth=1,
+                         compilation_cache_dir=None,
+                         telemetry_out=None, trace=None,
                          realtime=False, coscheduler_factory=None):
     """Closed loop over an N-host sharded cluster: tenant-hash ingress →
     per-host admission (gossip-informed SLO gate) → per-host continuous
@@ -154,7 +163,10 @@ def serve_crypto_cluster(*, hosts=2, duration_s=0.05, rate_hz=2048, n_c=8,
         d_tile=d_tile, tenant_rate_hz=tenant_rate_hz,
         slo_deadline_s=slo_deadline_s, occupancy_close=occupancy_close,
         merge_dispatch=merge_dispatch, row_ladder_max=row_ladder_max,
-        donate=donate, async_pipeline=async_pipeline, warm_start=warm_start)
+        donate=donate, async_pipeline=async_pipeline, warm_start=warm_start,
+        controller=controller, holdback_lambda=holdback_lambda,
+        inflight_depth=inflight_depth,
+        compilation_cache_dir=compilation_cache_dir)
     cluster = ClusterServer(
         ClusterConfig(n_hosts=hosts, gossip_period_s=gossip_period_s,
                       gossip_staleness_factor=gossip_staleness_factor,
@@ -219,6 +231,19 @@ def main():
     ap.add_argument("--async-pipeline", action="store_true",
                     help="zero-sync dispatch: launch now, gather at the next "
                          "serving event")
+    ap.add_argument("--controller", action="store_true",
+                    help="closed-loop close policy: adapt per-class target "
+                         "rung / max-age / occupancy from dispatch telemetry "
+                         "(static config values become the loop's bounds)")
+    ap.add_argument("--holdback-lambda", type=float, default=0.0,
+                    help="cross-event merge holdback aggressiveness (0 "
+                         "disables; requires --controller; SLO-priced)")
+    ap.add_argument("--inflight-depth", type=int, default=1,
+                    help="depth-k multi-flight launch ring per workload "
+                         "class (k>1 requires --async-pipeline)")
+    ap.add_argument("--compilation-cache-dir", default=None,
+                    help="persist compiled programs here across process "
+                         "restarts (JAX compilation cache)")
     args = ap.parse_args()
 
     reduction_by_workload = None
@@ -248,6 +273,10 @@ def main():
             merge_dispatch=not args.no_merge,
             row_ladder_max=args.row_ladder_max, donate=args.donate,
             async_pipeline=args.async_pipeline,
+            controller=args.controller,
+            holdback_lambda=args.holdback_lambda,
+            inflight_depth=args.inflight_depth,
+            compilation_cache_dir=args.compilation_cache_dir,
             telemetry_out=args.telemetry_out, realtime=args.realtime)
         m = snap["merged"]
         served = sum(1 for h in load.handles if h.done() and not h.rejected)
@@ -272,7 +301,17 @@ def main():
         bar = snap["drain_barrier"]
         print(f"drain barrier: {bar['hosts']} hosts quiesced → "
               f"{bar['batches_flushed']} batches flushed, "
-              f"complete={bar['complete']}")
+              f"complete={bar['complete']}, "
+              f"in-flight={bar['inflight_groups']}")
+        if args.controller:
+            ctl, hb = m["controller"], m["holdback"]
+            print(f"controller[{ctl['hosts']} hosts]: {ctl['updates']} "
+                  f"updates, m-occ EWMA mean "
+                  f"{ctl['m_occupancy_ewma_mean']:.3f}, top rung "
+                  f"{ctl['target_rows_max']}, age max "
+                  f"{ctl['max_age_s_max']*1e3:.1f}ms; holdback "
+                  f"{hb['held']} held → {hb['wins']} wins / "
+                  f"{hb['losses']} losses / {hb['flushed']} flushed")
         if args.telemetry_out:
             print(f"cluster telemetry JSON → {args.telemetry_out}")
     elif args.mode == "crypto-online":
@@ -286,6 +325,10 @@ def main():
             merge_dispatch=not args.no_merge,
             row_ladder_max=args.row_ladder_max, donate=args.donate,
             async_pipeline=args.async_pipeline,
+            controller=args.controller,
+            holdback_lambda=args.holdback_lambda,
+            inflight_depth=args.inflight_depth,
+            compilation_cache_dir=args.compilation_cache_dir,
             telemetry_out=args.telemetry_out, realtime=args.realtime)
         lat = snap["latency"]
         print(f"online: served {load.n_served}/{len(load.handles)} requests "
@@ -307,6 +350,16 @@ def main():
               f"{disp['batches_per_dispatch_mean']:.2f} batches/launch), "
               f"M-occ {disp['m_occupancy_mean']:.3f} "
               f"M-fill {disp['m_fill_mean']:.3f}")
+        if args.controller:
+            ctl, hb = snap["controller"], snap["holdback"]
+            classes = ", ".join(
+                f"{name}: rung {c['target_rows']} "
+                f"age {c['max_age_s']*1e3:.1f}ms "
+                f"m-occ {c['m_occupancy_ewma']:.3f}"
+                for name, c in ctl["classes"].items())
+            print(f"controller: {ctl['updates']} updates [{classes}]; "
+                  f"holdback {hb['held']} held → {hb['wins']} wins / "
+                  f"{hb['losses']} losses / {hb['flushed']} flushed")
         if args.telemetry_out:
             print(f"telemetry JSON → {args.telemetry_out}")
     else:

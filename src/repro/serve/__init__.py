@@ -12,7 +12,11 @@ Converts the offline measurement pipeline (Poisson replay → Tier-1 stacking
 * :mod:`telemetry` — K/M occupancy, queue depth, p50/p95/p99 latency,
   eager-vs-deferred reduction-stall counters, JSON export for ``BENCH_*``
   tracking;
-* :mod:`client`    — synthetic load generator (virtual or real-time pacing).
+* :mod:`client`    — synthetic load generator (virtual or real-time pacing);
+* :mod:`controller` — adaptive occupancy controller: EWMA feedback over the
+  dispatch telemetry drives the per-class close policy (target ladder rung,
+  max_age, occupancy threshold) and prices the λ-controlled merge holdback
+  against the SLO gate.
 
 ``ServeConfig.reduction_by_workload`` selects the fold discipline per
 workload class (paper §7.2.1): lazy (κ-amortised deferred Montgomery
@@ -24,6 +28,7 @@ from repro.serve.admission import (AdmissionController, AdmissionDecision,
                                    TokenBucket)
 from repro.serve.batcher import ContinuousBatcher, ClosedBatch
 from repro.serve.client import LoadGenerator, LoadResult, attach_payloads
+from repro.serve.controller import AdaptiveController
 from repro.serve.server import (CryptoServer, RejectedError, ResponseHandle,
-                                ServeConfig)
+                                ServeConfig, enable_compilation_cache)
 from repro.serve.telemetry import BatchRecord, LatencyHistogram, Telemetry

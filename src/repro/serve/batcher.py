@@ -24,6 +24,14 @@ can stack same-class batches densely (no interior padding rows) and its row
 ladder does the shape-stabilising padding once, on the merged operand.  The
 serving layer selects this mode automatically when its co-scheduler has a
 row ladder.
+
+With a ``controller`` (:class:`repro.serve.controller.AdaptiveController`)
+the close policy stops being static: the full trigger fires at the
+controller's per-class *target rung* instead of ``n_c``, the age trigger
+uses the per-class adapted ``max_age``, and the occupancy threshold (when
+configured) is the adapted one — all bounded by the static config values.
+``n_c``/``max_age_s``/``occupancy_close`` then act as the loop's initial
+values and floors/ceilings rather than as the policy itself.
 """
 from __future__ import annotations
 
@@ -59,14 +67,36 @@ class ContinuousBatcher:
                  bucket_granularity: int | None = None,
                  max_age_s: float = 0.01,
                  occupancy_close: float | None = None,
-                 pad_rows: bool = True):
+                 pad_rows: bool = True,
+                 controller=None):
         self.n_c = n_c
         self.granularity = bucket_granularity
         self.max_age_s = max_age_s
         self.occupancy_close = occupancy_close
         self.pad_rows = pad_rows
+        # Optional AdaptiveController: when present, the per-class close
+        # policy below asks it for target rows / age / occupancy instead of
+        # using the static values (which become the loop's bounds).
+        self.controller = controller
         self._open: dict[tuple, _OpenBatch] = {}
         self._depth = 0
+
+    # --- per-class close policy (static or controller-driven) -----------------
+
+    def _target_rows(self, key: tuple) -> int:
+        if self.controller is not None:
+            return self.controller.target_rows(key)
+        return self.n_c
+
+    def _max_age_for(self, key: tuple) -> float:
+        if self.controller is not None:
+            return self.controller.max_age_s(key)
+        return self.max_age_s
+
+    def _occupancy_close_for(self, key: tuple) -> float | None:
+        if self.controller is not None:
+            return self.controller.occupancy_close(key)
+        return self.occupancy_close
 
     # --- introspection --------------------------------------------------------
 
@@ -79,6 +109,13 @@ class ContinuousBatcher:
     def open_batches(self) -> int:
         """Open (workload, bucket) classes awaiting a close trigger."""
         return len(self._open)
+
+    def class_depth(self, key: tuple) -> int:
+        """Pending rows of one (workload, d_bucket) class — the per-class
+        backlog the adaptive controller's queue model consumes (the global
+        ``depth`` would let a busy neighbour class inflate it)."""
+        ob = self._open.get(key)
+        return len(ob.requests) if ob is not None else 0
 
     def oldest_age(self, now: float) -> float:
         if not self._open:
@@ -100,27 +137,33 @@ class ContinuousBatcher:
         ob.requests.append(req)
         ob.sum_degrees += req.degree
         self._depth += 1
-        if len(ob.requests) >= self.n_c:
+        if self.controller is not None:
+            self.controller.observe_arrival(key, now)
+        target = self._target_rows(key)
+        if len(ob.requests) >= target:
             return [self._close(key, CLOSE_FULL, now)]
-        if self.occupancy_close is not None:
-            occ = ob.sum_degrees / (self.n_c * ob.d_bucket)
-            if occ >= self.occupancy_close:
+        occupancy_close = self._occupancy_close_for(key)
+        if occupancy_close is not None:
+            occ = ob.sum_degrees / (target * ob.d_bucket)
+            if occ >= occupancy_close:
                 return [self._close(key, CLOSE_OCCUPANCY, now)]
         return []
 
     def poll(self, now: float) -> list[ClosedBatch]:
-        """Close every open batch whose oldest row has exceeded max_age_s."""
+        """Close every open batch whose oldest row has exceeded its class's
+        max age (static, or controller-adapted)."""
         # Same float expression as next_deadline(): pumping exactly at the
         # returned deadline must close the batch that produced it.
         due = [key for key, ob in self._open.items()
-               if now >= ob.opened_at + self.max_age_s]
+               if now >= ob.opened_at + self._max_age_for(key)]
         return [self._close(key, CLOSE_AGE, now) for key in due]
 
     def next_deadline(self) -> float | None:
         """Earliest future instant at which poll() will close something."""
         if not self._open:
             return None
-        return min(ob.opened_at + self.max_age_s for ob in self._open.values())
+        return min(ob.opened_at + self._max_age_for(key)
+                   for key, ob in self._open.items())
 
     def flush(self, now: float = 0.0) -> list[ClosedBatch]:
         """Close everything (graceful drain)."""
@@ -129,6 +172,8 @@ class ContinuousBatcher:
     def _close(self, key: tuple, reason: str, now: float) -> ClosedBatch:
         ob = self._open.pop(key)
         self._depth -= len(ob.requests)
+        if self.controller is not None:
+            self.controller.observe_close(key, reason)
         operand = stack_rows(ob.requests, ob.d_bucket,
                              n_rows=self.n_c if self.pad_rows else None)
         batch = StackedBatch(workload=ob.workload, d_bucket=ob.d_bucket,

@@ -20,9 +20,12 @@ bucketing, so only the grouping differs.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import os
 import time
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import validator as V
@@ -30,7 +33,8 @@ from repro.core.scheduler.coscheduler import (SliceCoScheduler,
                                               default_row_ladder)
 from repro.core.scheduler.rectangular import packing_metrics
 from repro.serve.admission import AdmissionController, AdmissionDecision
-from repro.serve.batcher import ClosedBatch, ContinuousBatcher
+from repro.serve.batcher import CLOSE_DRAIN, ClosedBatch, ContinuousBatcher
+from repro.serve.controller import AdaptiveController
 from repro.serve.telemetry import BatchRecord, DispatchRecord, Telemetry
 
 PENDING, DONE, REJECTED = "pending", "done", "rejected"
@@ -140,6 +144,54 @@ class ServeConfig:
     row_ladder_max: int | None = None
     donate: bool = False
     async_pipeline: bool = False
+    # closed-loop control plane (all bit-for-bit neutral — only grouping and
+    # timing change, never row arithmetic):
+    #   controller — adapt the per-class close policy (target ladder rung,
+    #     max_age, occupancy threshold) from the dispatch telemetry EWMA
+    #     instead of the static values above, which become the loop's
+    #     initial values and floor/ceiling bounds;
+    #   holdback_lambda — cross-event merge holdback: a short closed batch
+    #     may wait up to λ × (predicted merge-partner ETA) for a same-class
+    #     partner, capped by the SLO budget so the admission-visible p99 is
+    #     never breached (0 disables; requires the controller's queue model
+    #     and merge_dispatch);
+    #   inflight_depth — depth-k multi-flight launch ring: up to k launch
+    #     groups per workload class stay in flight before a gather blocks,
+    #     so disjoint program classes keep the device saturated under
+    #     bursty closes (1 reproduces the PR-4 single-flight pipeline
+    #     exactly; >1 requires async_pipeline).
+    controller: bool = False
+    controller_alpha: float = 0.3
+    controller_gain: float = 0.25
+    m_fill_target: float = 0.5
+    max_age_floor_s: float | None = None   # None → max_age_s / 4
+    max_age_ceil_s: float | None = None    # None → max_age_s × 8 (SLO-capped)
+    occupancy_floor: float | None = None   # None → occupancy_close / 2
+    occupancy_ceil: float = 0.95
+    holdback_lambda: float = 0.0
+    holdback_slo_fraction: float = 0.5
+    inflight_depth: int = 1
+    # persistent compile cache: point the JAX compilation cache at this
+    # directory so compiled programs survive process restarts — a cold boot
+    # then gets the same zero-trace first dispatch an in-process warm start
+    # does (pair with ``warm_start`` to populate it at first boot).
+    compilation_cache_dir: str | None = None
+
+
+def enable_compilation_cache(cache_dir: str) -> str:
+    """Point JAX's persistent compilation cache at ``cache_dir`` (created if
+    missing) and lower the persistence thresholds so even fast CPU compiles
+    are cached — cold boots should warm from disk, not re-trace.  Safe to
+    call repeatedly; unknown tuning knobs on older jaxlibs are skipped."""
+    os.makedirs(cache_dir, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    for opt, val in (("jax_persistent_cache_min_compile_time_secs", 0.0),
+                     ("jax_persistent_cache_min_entry_size_bytes", -1)):
+        try:
+            jax.config.update(opt, val)
+        except (AttributeError, ValueError):
+            pass
+    return cache_dir
 
 
 def coscheduler_from_config(cfg: ServeConfig,
@@ -160,23 +212,75 @@ class CryptoServer:
                  coscheduler: SliceCoScheduler | None = None,
                  telemetry: Telemetry | None = None):
         self.config = cfg = config or ServeConfig()
+        if cfg.inflight_depth < 1:
+            raise ValueError(f"inflight_depth must be ≥ 1, got "
+                             f"{cfg.inflight_depth}")
+        if cfg.inflight_depth > 1 and not cfg.async_pipeline:
+            raise ValueError(
+                "inflight_depth > 1 needs async_pipeline: the launch ring "
+                "only exists between serving events — a synchronous "
+                "dispatch gathers every launch before returning")
+        if cfg.holdback_lambda < 0:
+            raise ValueError(f"holdback_lambda must be ≥ 0, got "
+                             f"{cfg.holdback_lambda}")
+        if cfg.holdback_lambda > 0 and not cfg.controller:
+            raise ValueError(
+                "holdback_lambda > 0 needs controller=True: the holdback "
+                "window is priced from the controller's per-class queue "
+                "model (arrival-rate EWMA + target rung)")
+        if cfg.holdback_lambda > 0 and not cfg.merge_dispatch:
+            raise ValueError(
+                "holdback_lambda > 0 needs merge_dispatch: holding a batch "
+                "for a merge partner is pointless if same-class batches "
+                "never coalesce along M")
+        # Persistent compile cache must be live before anything traces —
+        # the whole point is that precompile/warm_start below hit disk.
+        if cfg.compilation_cache_dir:
+            enable_compilation_cache(cfg.compilation_cache_dir)
         self.cos = coscheduler or coscheduler_from_config(cfg)
+        self.controller = None
+        if cfg.controller:
+            self.controller = AdaptiveController(
+                ladder=self.cos.row_ladder or (cfg.n_c,),
+                n_c=cfg.n_c, max_age_s=cfg.max_age_s,
+                occupancy_close=cfg.occupancy_close, n_c_max=cfg.n_c_max,
+                alpha=cfg.controller_alpha, gain=cfg.controller_gain,
+                m_fill_target=cfg.m_fill_target,
+                max_age_floor_s=cfg.max_age_floor_s,
+                max_age_ceil_s=cfg.max_age_ceil_s,
+                occupancy_floor=cfg.occupancy_floor,
+                occupancy_ceil=cfg.occupancy_ceil,
+                holdback_lambda=cfg.holdback_lambda,
+                holdback_slo_fraction=cfg.holdback_slo_fraction,
+                slo_deadline_s=cfg.slo_deadline_s)
         # With a row ladder the batcher emits mergeable (live-row) operands
         # and the co-scheduler pads once, on the merged operand — padding to
         # N_c here as well would interleave dead rows into super-batches.
         self.batcher = ContinuousBatcher(
             n_c=cfg.n_c, bucket_granularity=cfg.bucket_granularity,
             max_age_s=cfg.max_age_s, occupancy_close=cfg.occupancy_close,
-            pad_rows=cfg.pad_rows and self.cos.row_ladder is None)
+            pad_rows=cfg.pad_rows and self.cos.row_ladder is None,
+            controller=self.controller)
         self.admission = AdmissionController(
             max_pending=cfg.max_pending, tenant_rate_hz=cfg.tenant_rate_hz,
             tenant_burst=cfg.tenant_burst, slo_deadline_s=cfg.slo_deadline_s)
         self.telemetry = telemetry or Telemetry()
+        if self.controller is not None:
+            self.telemetry.attach_section("controller",
+                                          self.controller.snapshot)
         # Zero-sync pipeline state: batches validated + staged but not yet
-        # launched, and the single in-flight launch group awaiting gather.
+        # launched, per-class launch rings of in-flight groups awaiting
+        # gather (inflight_depth == 1 keeps the whole event's staged set in
+        # one flight under the single ``None`` key — the PR-4 single-flight
+        # pipeline exactly), and the merge-holdback pen of closed batches
+        # priced to wait for a partner.
         self._staged: list[ClosedBatch] = []
-        # (closed, InflightDispatch, launch log, launch_s)
-        self._flight: tuple | None = None
+        # ring key -> deque of (launch seq, closed, InflightDispatch,
+        # launch log, launch_s)
+        self._rings: dict = collections.OrderedDict()
+        self._launch_seq = 0
+        # class key -> (ClosedBatch, release_at, held_at)
+        self._held: dict[tuple, tuple] = {}
         # Pending handles keyed by request identity: O(1) resolve, pruned on
         # completion (a long-lived server must not accumulate history), and
         # correct when one tenant has several rows in flight.
@@ -243,8 +347,20 @@ class CryptoServer:
         return len(closed)
 
     def next_deadline(self) -> float | None:
-        """When pump() next has work — live loops sleep until this instant."""
-        return self.batcher.next_deadline()
+        """When pump() next has work — live loops sleep until this instant.
+        Holdback release deadlines count: a held batch must be launched at
+        its priced window's edge even if no new request ever arrives."""
+        deadline = self.batcher.next_deadline()
+        for _, release_at, _ in self._held.values():
+            deadline = (release_at if deadline is None
+                        else min(deadline, release_at))
+        return deadline
+
+    @property
+    def inflight_groups(self) -> int:
+        """Launch groups in flight (launched, not yet gathered) across every
+        per-class ring — 0 after any drain, by the quiesce contract."""
+        return sum(len(ring) for ring in self._rings.values())
 
     def quiesce(self, now: float | None = None):
         """Drain phase 1: stop admitting, keep in-flight rows queued.
@@ -304,37 +420,138 @@ class CryptoServer:
         rep.raise_if_failed()
         self._validated.add(key)
 
+    def _class_key(self, cb: ClosedBatch) -> tuple:
+        return (cb.batch.workload, cb.batch.d_bucket)
+
+    def _apply_holdback(self, closed: list[ClosedBatch], now: float,
+                        final: bool) -> list[ClosedBatch]:
+        """The λ-priced merge holdback: decide, per newly closed batch,
+        whether to stage it now or hold it for a predicted merge partner —
+        and release every previously held batch whose partner arrived (win),
+        whose priced window expired (loss), or that a drain flushes.
+
+        Holding changes grouping only — row semantics keep the eventual
+        merged launch bit-for-bit equal to launching immediately — so the
+        only cost is the held rows' latency, which the pricing bounds."""
+        if not self._held and (self.controller is None
+                               or self.config.holdback_lambda <= 0):
+            return closed
+        out: list[ClosedBatch] = []
+        if final:
+            for cb, _, held_at in self._held.values():
+                self.telemetry.record_holdback("flushed",
+                                               hold_s=now - held_at)
+                out.append(cb)
+            self._held.clear()
+        else:
+            for key in [k for k, (_, rel, _) in self._held.items()
+                        if rel <= now]:
+                cb, _, held_at = self._held.pop(key)
+                self.telemetry.record_holdback("losses",
+                                               hold_s=now - held_at)
+                out.append(cb)
+        for cb in closed:
+            key = self._class_key(cb)
+            held = self._held.pop(key, None)
+            if held is not None:
+                # The predicted partner materialised: launch both together
+                # (launch_mixed coalesces them along M into one tall group).
+                self.telemetry.record_holdback("wins",
+                                               hold_s=now - held[2])
+                out.append(held[0])
+                out.append(cb)
+                continue
+            if (final or cb.reason == CLOSE_DRAIN
+                    or cb.batch.n_c >= self.controller.target_rows(key)):
+                out.append(cb)       # already at target height — nothing to
+                continue             # gain from waiting
+            window = self.controller.holdback_window_s(key, cb.age_s)
+            if window > 0.0:
+                self.telemetry.record_holdback("held", rows=cb.batch.n_c)
+                self._held[key] = (cb, now + window, now)
+            else:
+                out.append(cb)
+        return out
+
+    def _ring_for(self, key) -> collections.deque:
+        ring = self._rings.get(key)
+        if ring is None:
+            ring = self._rings[key] = collections.deque()
+        return ring
+
+    def _launch_staged(self, staged: list[ClosedBatch]) -> set:
+        """Enqueue the staged set onto the launch ring(s) and return the
+        ring keys launched.  Depth 1 keeps the whole event in one flight
+        (cross-class groups share one launch_mixed — the PR-4 pipeline);
+        depth > 1 cuts per workload class so each class ring can hold k of
+        *its own* groups in flight."""
+        if self.config.inflight_depth == 1:
+            parts = [(None, staged)]
+        else:
+            by_class: dict = {}
+            parts = []
+            for cb in staged:
+                key = self._class_key(cb)
+                if key not in by_class:
+                    by_class[key] = []
+                    parts.append((key, by_class[key]))
+                by_class[key].append(cb)
+        for key, part in parts:
+            self._launch_seq += 1
+            self._ring_for(key).append((self._launch_seq, part,
+                                        *self._launch(part)))
+        return {key for key, _ in parts}
+
+    def _oldest_ring(self) -> collections.deque | None:
+        live = [ring for ring in self._rings.values() if ring]
+        if not live:
+            return None
+        return min(live, key=lambda ring: ring[0][0])
+
     def _dispatch(self, closed: list[ClosedBatch], now: float,
                   final: bool = False):
         """Stage newly closed batches and advance the dispatch pipeline.
 
         Synchronous mode launches + gathers in place (one blocking edge per
         serving event, as before).  Async mode launches now and defers the
-        gather to the next serving event, so the caller returns while the
-        device computes and the D2H copy streams; batches closed while a
-        launch is in flight merge into the next one (M-axis super-batching
-        fed by the pipeline itself).  ``final`` forces a full flush (drain).
-        """
+        gather, so the caller returns while the device computes and the D2H
+        copy streams; batches closed while a launch is in flight merge into
+        the next one (M-axis super-batching fed by the pipeline itself).
+        With ``inflight_depth`` k, up to k launch groups per workload class
+        ride the ring while that class keeps launching; a class that did
+        not launch this event has its oldest flight materialised instead,
+        so every handle resolves at the next serving event its class goes
+        quiet — a busy neighbour class can never starve another class's
+        in-flight results.  ``final`` forces a full flush (drain): holdback
+        pen emptied, every ring retired in launch order, zero groups left
+        in flight."""
         if self.config.validate:
             for cb in closed:
                 self._validate_once(cb.batch)
-        self._staged.extend(closed)
+        self._staged.extend(self._apply_holdback(closed, now, final))
         if not self.config.async_pipeline:
             if self._staged:
                 staged, self._staged = self._staged, []
                 self._finish(staged, *self._launch(staged), now)
             return
-        prev, self._flight = self._flight, None
+        launched_keys = set()
         if self._staged:
             staged, self._staged = self._staged, []
-            self._flight = (staged, *self._launch(staged))
-        if prev is not None:
-            # Gather *after* the new launch is enqueued: the device starts
-            # the next group while the host materialises the previous one.
-            self._finish(*prev, now)
-        if final and self._flight is not None:
-            flight, self._flight = self._flight, None
-            self._finish(*flight, now)
+            launched_keys = self._launch_staged(staged)
+        if final:
+            # Retire the full ring in launch order — drain leaves nothing
+            # in flight (the cluster barrier counts on it).
+            while (ring := self._oldest_ring()) is not None:
+                self._finish(*ring.popleft()[1:], now)
+            return
+        depth = self.config.inflight_depth
+        for key, ring in self._rings.items():
+            # Gather *after* the new launches are enqueued: the device
+            # starts the next group while the host materialises these.
+            while len(ring) > depth:
+                self._finish(*ring.popleft()[1:], now)
+            if key not in launched_keys and ring:
+                self._finish(*ring.popleft()[1:], now)
 
     def _launch(self, staged: list[ClosedBatch]):
         t0 = time.perf_counter()
@@ -358,8 +575,23 @@ class CryptoServer:
         # launch group; per-batch device timing is not observable from here).
         total_rows = sum(cb.batch.n_c for cb in closed) or 1
         self.admission.observe_service(total_rows, service_s)
+        cluster_depth = None
+        if self.controller is not None and self.cluster_depth_fn is not None:
+            # Fold the gossiped fleet depth into the control setpoint (the
+            # bounded-staleness contract is enforced inside the view merge,
+            # so the controller can never consume an over-age digest).
+            cluster_depth = self.cluster_depth_fn(now)
         for entry in log:
             live, launched = entry["live_rows"], entry["launched_rows"]
+            if self.controller is not None:
+                # Per-class backlog: the global batcher depth would let a
+                # busy neighbour class snap this class's target rung to the
+                # ladder top and mis-price its holdback windows.
+                self.controller.observe_dispatch(
+                    (entry["workload"], entry["d_bucket"]), live_rows=live,
+                    queue_depth=self.batcher.class_depth(
+                        (entry["workload"], entry["d_bucket"])), now=now,
+                    cluster_depth=cluster_depth)
             self.telemetry.record_dispatch(DispatchRecord(
                 workload=entry["workload"], d_bucket=entry["d_bucket"],
                 n_batches=entry["n_batches"], live_rows=live,

@@ -111,6 +111,8 @@ class BatchRecord:
 class Telemetry:
     """Accumulates serving events; ``snapshot()`` is the export surface."""
 
+    HOLDBACK_EVENTS = ("held", "wins", "losses", "flushed")
+
     def __init__(self):
         self.batches: list[BatchRecord] = []
         self.dispatches: list[DispatchRecord] = []
@@ -119,6 +121,20 @@ class Telemetry:
         self.admission_counts: dict[str, int] = {}
         self._queue_depth_sum = 0
         self._queue_depth_max = 0
+        # Merge-holdback audit: every hold must end as exactly one win
+        # (a partner arrived inside the priced window), loss (the window
+        # expired first), or flush (drain released it).
+        self.holdback = {k: 0 for k in self.HOLDBACK_EVENTS}
+        self.holdback.update(held_rows=0, hold_s_sum=0.0, hold_s_max=0.0)
+        # Extra snapshot sections attached by the serving layer (e.g. the
+        # adaptive controller's state) — name -> zero-arg provider.
+        self._sections: dict = {}
+
+    def attach_section(self, name: str, provider):
+        """Register a callable whose result is exported under ``name`` in
+        every snapshot (the controller uses this to publish its setpoints
+        without telemetry knowing its shape)."""
+        self._sections[name] = provider
 
     # --- event sinks ----------------------------------------------------------
 
@@ -132,6 +148,21 @@ class Telemetry:
 
     def record_admission(self, reason: str):
         self.admission_counts[reason] = self.admission_counts.get(reason, 0) + 1
+
+    def record_holdback(self, event: str, *, rows: int = 0,
+                        hold_s: float = 0.0):
+        """``held`` when a batch enters holdback; ``wins``/``losses``/
+        ``flushed`` when it leaves (with its realised hold duration)."""
+        if event not in self.HOLDBACK_EVENTS:
+            raise ValueError(f"unknown holdback event {event!r} "
+                             f"(want one of {self.HOLDBACK_EVENTS})")
+        self.holdback[event] += 1
+        if event == "held":
+            self.holdback["held_rows"] += rows
+        else:
+            self.holdback["hold_s_sum"] += hold_s
+            self.holdback["hold_s_max"] = max(self.holdback["hold_s_max"],
+                                              hold_s)
 
     def observe_latency(self, seconds: float, *, queue_wait_s: float = None):
         self.latency.observe(seconds)
@@ -193,7 +224,10 @@ class Telemetry:
         }
         admitted = self.admission_counts.get("ok", 0)
         rejected = sum(v for k, v in self.admission_counts.items() if k != "ok")
+        extra = {name: provider() for name, provider in self._sections.items()}
         return {
+            **extra,
+            "holdback": dict(self.holdback),
             "batches": n_b,
             "requests_served": sum(r.n_c for r in self.batches),
             "k_occupancy_mean": (sum(r.k_occupancy for r in self.batches) / n_b)
