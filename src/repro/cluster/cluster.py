@@ -38,6 +38,8 @@ import dataclasses
 import json
 import time
 
+from repro.obs.export import write_chrome_trace
+from repro.obs.tracing import Tracer
 from repro.serve.server import (CryptoServer, ServeConfig,
                                 coscheduler_from_config)
 from repro.cluster.gossip import GossipBus
@@ -79,9 +81,20 @@ class ClusterServer:
                 cos = coscheduler_from_config(cfg.serve, host=h)
             srv = CryptoServer(cfg.serve, coscheduler=cos)
             srv.cluster_depth_fn = self._make_depth_fn(h)
+            if srv.tracer is not None and srv.tracer.host is None:
+                # A factory-built co-scheduler may not carry its host id;
+                # tag the tracer here so fleet-trace events keep their
+                # per-host process track.  (Note: sharing ONE co-scheduler
+                # across hosts also shares its tracer hook — last host
+                # wins — so traced clusters should use per-host
+                # co-schedulers, the default construction.)
+                srv.tracer.host = h
             self.hosts.append(srv)
         self._submissions = [0] * cfg.n_hosts
         self._barrier: dict | None = None
+        # Cluster-control tracer (host=None → its own Perfetto process):
+        # carries the drain-barrier span over the fleet timeline.
+        self.tracer = Tracer(host=None) if cfg.serve.tracing else None
 
     # --- gossip wiring --------------------------------------------------------
 
@@ -124,6 +137,9 @@ class ClusterServer:
     def drain(self, now: float | None = None) -> int:
         """Distributed two-phase drain barrier (see module docstring)."""
         now = time.monotonic() if now is None else now
+        if self.tracer is not None:
+            self.tracer.emit("B", "drain_barrier", now, track="cluster",
+                             args={"hosts": len(self.hosts)})
         # Phase 1 — quiesce: fleet-wide ingress stop before any flush.
         for srv in self.hosts:
             srv.quiesce(now)
@@ -140,6 +156,9 @@ class ClusterServer:
             drained_at=now, batches_flushed=flushed,
             inflight_groups=sum(srv.inflight_groups for srv in self.hosts),
             complete=True)
+        if self.tracer is not None:
+            self.tracer.emit("E", "drain_barrier", now, track="cluster",
+                             args={"batches_flushed": flushed})
         return flushed
 
     @property
@@ -179,3 +198,25 @@ class ClusterServer:
         with open(path, "w") as f:
             json.dump(snap, f, indent=2, sort_keys=True)
         return snap
+
+    # --- fleet trace ----------------------------------------------------------
+
+    def trace_events(self) -> list[dict]:
+        """One merged fleet trace: every host's buffered events (host-tagged,
+        so each host keeps its own Perfetto process track) plus the cluster-
+        control events, in timestamp order."""
+        events = [] if self.tracer is None else self.tracer.event_dicts()
+        for srv in self.hosts:
+            events.extend(srv.trace_events())
+        # Per-host streams stay in emission order (span begins precede their
+        # ends); Perfetto orders by timestamp itself, so no global sort that
+        # could interleave a sub-µs-inverted begin/end pair.
+        return events
+
+    def write_trace(self, path: str) -> dict:
+        """Export the merged fleet trace as Chrome-trace JSON."""
+        if self.tracer is None:
+            raise RuntimeError("tracing is off — set ServeConfig(tracing="
+                               "True) in the cluster config to record")
+        return write_chrome_trace(path, self.trace_events(),
+                                  label="repro.cluster")

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import math
 
+from repro.obs.ledger import merge_penalty_sections
 from repro.serve.telemetry import LatencyHistogram
 
 MERGE_TOLERANCE_REL = 1e-9   # documented float-roundoff bound (exact path)
@@ -45,8 +46,30 @@ def _weighted_mean(pairs) -> float:
     return sum(v * w for v, w in pairs) / total
 
 
+def _sketch_quantile(buckets: dict, zero: int, count: int, max_s: float,
+                     gamma: float, q: float) -> float:
+    """Quantile of a merged log-bucket sketch: cumulative walk to the rank,
+    geometric bucket midpoint as the representative value."""
+    if not count:
+        return 0.0
+    rank = (q / 100.0) * (count - 1)
+    seen = zero
+    if rank < seen:
+        return 0.0
+    for b in sorted(buckets):
+        seen += buckets[b]
+        if rank < seen:
+            return min(gamma ** (b + 0.5), max_s)
+    return max_s
+
+
 def _merge_histograms(summaries: list[dict]) -> dict:
-    """Merge per-host latency/queue-wait summaries (see module docstring)."""
+    """Merge per-host latency/queue-wait summaries (see module docstring).
+    Degenerate hosts (empty or missing summaries) contribute nothing."""
+    summaries = [s for s in summaries if s]
+    if not summaries:
+        return {"count": 0, "mean_s": 0.0, "p50_s": 0.0, "p95_s": 0.0,
+                "p99_s": 0.0, "max_s": 0.0, "merged_exact": True}
     if all("samples" in s for s in summaries):
         h = LatencyHistogram()
         for s in summaries:
@@ -54,6 +77,42 @@ def _merge_histograms(summaries: list[dict]) -> dict:
                 h.observe(v)
         merged = h.summary()
         merged["merged_exact"] = True
+        return merged
+    if all(("samples" in s) or ("sketch" in s) for s in summaries):
+        # ≥1 host collapsed to a log-bucket sketch: merge bucket-wise (exact
+        # hosts are bucketed on the fly), keep count/mean/max exact, and
+        # flip merged_exact off — quantiles now carry the sketch's bounded
+        # relative error.
+        gamma = LatencyHistogram.GAMMA
+        for s in summaries:
+            g = s.get("sketch", {}).get("gamma", gamma)
+            if abs(g - gamma) > 1e-12:
+                raise ValueError(f"sketch gamma mismatch: host exported "
+                                 f"{g}, merge expects {gamma}")
+        buckets: dict[int, int] = {}
+        zero = count = 0
+        total = max_s = 0.0
+        for s in summaries:
+            n = s.get("count", 0)
+            count += n
+            total += s.get("mean_s", 0.0) * n
+            max_s = max(max_s, s.get("max_s", 0.0))
+            if "sketch" in s:
+                zero += s["sketch"].get("zero", 0)
+                for b, c in s["sketch"].get("buckets", {}).items():
+                    buckets[int(b)] = buckets.get(int(b), 0) + c
+            else:
+                for v in s["samples"]:
+                    if v <= 0.0:
+                        zero += 1
+                    else:
+                        b = math.floor(math.log(v) / math.log(gamma))
+                        buckets[b] = buckets.get(b, 0) + 1
+        merged = {"count": count, "mean_s": (total / count) if count else 0.0,
+                  "max_s": max_s, "merged_exact": False}
+        for q, key in ((50, "p50_s"), (95, "p95_s"), (99, "p99_s")):
+            merged[key] = _sketch_quantile(buckets, zero, count, max_s,
+                                           gamma, q)
         return merged
     counts = [s.get("count", 0) for s in summaries]
     merged = {"count": sum(counts),
@@ -70,27 +129,38 @@ def _merge_histograms(summaries: list[dict]) -> dict:
 
 
 def _merge_per_workload(snaps: list[dict]) -> dict:
+    """Per-mode batch counts merge exactly across hosts — a fleet may
+    legitimately run one class eager on some hosts and κ-deferred on others
+    (or flip mid-run), so the merge reports the counts and derives the
+    ``reduction`` label (single mode, or "mixed") instead of rejecting the
+    disagreement.  Hosts predating ``reduction_batches`` are synthesised
+    from their single ``reduction`` label."""
     out: dict = {}
     for snap in snaps:
         for wname, w in snap.get("per_workload", {}).items():
             m = out.setdefault(wname, {
                 "batches": 0, "requests": 0, "folds": 0,
-                "reduction": w["reduction"],
+                "reduction_batches": {},
                 "_k_sum": 0.0, "_m_sum": 0.0})
-            if m["reduction"] != w["reduction"]:
-                raise ValueError(
-                    f"hosts disagree on reduction mode for {wname!r}: "
-                    f"{m['reduction']} vs {w['reduction']} — per-class "
-                    f"reduction config must be cluster-uniform")
-            m["batches"] += w["batches"]
-            m["requests"] += w["requests"]
-            m["folds"] += w["folds"]
-            m["_k_sum"] += w["k_occupancy_mean"] * w["batches"]
-            m["_m_sum"] += w["m_occupancy_mean"] * w["batches"]
+            batches = w.get("batches", 0)
+            modes = w.get("reduction_batches")
+            if modes is None:
+                modes = {w.get("reduction", "eager"): batches}
+            for mode, n in modes.items():
+                m["reduction_batches"][mode] = (
+                    m["reduction_batches"].get(mode, 0) + n)
+            m["batches"] += batches
+            m["requests"] += w.get("requests", 0)
+            m["folds"] += w.get("folds", 0)
+            m["_k_sum"] += w.get("k_occupancy_mean", 0.0) * batches
+            m["_m_sum"] += w.get("m_occupancy_mean", 0.0) * batches
     for m in out.values():
         b = m["batches"] or 1
         m["k_occupancy_mean"] = m.pop("_k_sum") / b
         m["m_occupancy_mean"] = m.pop("_m_sum") / b
+        modes = sorted(k for k, v in m["reduction_batches"].items() if v)
+        m["reduction"] = modes[0] if len(modes) == 1 else (
+            "mixed" if modes else "eager")
     return out
 
 
@@ -166,13 +236,13 @@ def _merge_reduction_stalls(snaps: list[dict]) -> dict:
         stalls = snap.get("reduction_stalls")
         if not stalls:
             continue
-        out["eager_folds"] += stalls["eager_folds"]
-        out["deferred_folds"] += stalls["deferred_folds"]
-        for reason, by in stalls["by_close_reason"].items():
+        out["eager_folds"] += stalls.get("eager_folds", 0)
+        out["deferred_folds"] += stalls.get("deferred_folds", 0)
+        for reason, by in stalls.get("by_close_reason", {}).items():
             slot = out["by_close_reason"].setdefault(
                 reason, {"eager_folds": 0, "deferred_folds": 0})
-            slot["eager_folds"] += by["eager_folds"]
-            slot["deferred_folds"] += by["deferred_folds"]
+            slot["eager_folds"] += by.get("eager_folds", 0)
+            slot["deferred_folds"] += by.get("deferred_folds", 0)
     return out
 
 
@@ -201,35 +271,45 @@ def merge_snapshots(snaps: list[dict]) -> dict:
     """
     if not snaps:
         raise ValueError("merge_snapshots needs at least one host snapshot")
-    batches = [s["batches"] for s in snaps]
-    admission_by = _merge_counter_dicts(s["admission"]["by_reason"]
-                                        for s in snaps)
+    # Every lookup below is defensive: a degenerate host (zero batches,
+    # empty histograms, predates a section) contributes zeros, never a
+    # KeyError — the fleet merge must survive a host that served nothing.
+    batches = [s.get("batches", 0) for s in snaps]
+    admission = [s.get("admission", {}) for s in snaps]
     merged = {
         "batches": sum(batches),
-        "requests_served": sum(s["requests_served"] for s in snaps),
+        "requests_served": sum(s.get("requests_served", 0) for s in snaps),
         "k_occupancy_mean": _weighted_mean(
-            [(s["k_occupancy_mean"], b) for s, b in zip(snaps, batches)]),
+            [(s.get("k_occupancy_mean", 0.0), b)
+             for s, b in zip(snaps, batches)]),
         "m_occupancy_mean": _weighted_mean(
-            [(s["m_occupancy_mean"], b) for s, b in zip(snaps, batches)]),
+            [(s.get("m_occupancy_mean", 0.0), b)
+             for s, b in zip(snaps, batches)]),
         "queue_depth_mean": _weighted_mean(
-            [(s["queue_depth_mean"], b) for s, b in zip(snaps, batches)]),
-        "queue_depth_max": max(s["queue_depth_max"] for s in snaps),
-        "service_s_total": sum(s["service_s_total"] for s in snaps),
-        "close_reasons": _merge_counter_dicts(s["close_reasons"]
+            [(s.get("queue_depth_mean", 0.0), b)
+             for s, b in zip(snaps, batches)]),
+        "queue_depth_max": max((s.get("queue_depth_max", 0) for s in snaps),
+                               default=0),
+        "service_s_total": sum(s.get("service_s_total", 0.0) for s in snaps),
+        "close_reasons": _merge_counter_dicts(s.get("close_reasons", {})
                                               for s in snaps),
         "reduction_stalls": _merge_reduction_stalls(snaps),
         "dispatch": _merge_dispatch(snaps),
         "holdback": _merge_holdback(snaps),
         "per_workload": _merge_per_workload(snaps),
-        "latency": _merge_histograms([s["latency"] for s in snaps]),
-        "queue_wait": _merge_histograms([s["queue_wait"] for s in snaps]),
+        "penalty": merge_penalty_sections(
+            [s.get("penalty") for s in snaps]),
+        "latency": _merge_histograms([s.get("latency") for s in snaps]),
+        "queue_wait": _merge_histograms([s.get("queue_wait")
+                                         for s in snaps]),
         "admission": {
-            "admitted": sum(s["admission"]["admitted"] for s in snaps),
-            "rejected": sum(s["admission"]["rejected"] for s in snaps),
-            "by_reason": admission_by,
+            "admitted": sum(a.get("admitted", 0) for a in admission),
+            "rejected": sum(a.get("rejected", 0) for a in admission),
+            "by_reason": _merge_counter_dicts(a.get("by_reason", {})
+                                              for a in admission),
         },
         "load_imbalance": load_imbalance(
-            [s["requests_served"] for s in snaps]),
+            [s.get("requests_served", 0) for s in snaps]),
         "n_hosts": len(snaps),
     }
     controller = _merge_controller(snaps)

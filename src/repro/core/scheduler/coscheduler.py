@@ -122,6 +122,7 @@ class _LaunchGroup:
     members: list          # (input index, StackedBatch, row_lo, row_hi)
     operand_rows: int = 0  # stacked operand height before ladder padding
     live_rows: int = 0     # tenant rows only (excludes batcher zero-pad rows)
+    lid: int = 0           # causal launch ID (0 when tracing is off)
 
 
 @dataclasses.dataclass
@@ -199,6 +200,11 @@ class SliceCoScheduler:
         # rows) — the serving telemetry's per-dispatch M-occupancy source.
         self.dispatch_log: collections.deque = collections.deque(
             maxlen=DISPATCH_LOG_MAX)
+        # Observability hook (repro.obs.Tracer), installed by the serving
+        # layer when tracing is on: launches then emit device-track spans on
+        # the anchored serving clock and dispatch_log entries carry a causal
+        # launch ID ("lid") linking them to batch/request spans.
+        self.tracer = None
 
     def reduction_for(self, workload: str) -> str:
         """The fold discipline this slice applies to a workload class."""
@@ -333,6 +339,15 @@ class SliceCoScheduler:
         operand = self._shard(group.workload, jnp.asarray(operand_np))
         out = self.jitted_for(group.workload, group.d_bucket)(
             operand, eng.device_planes())
+        tr = self.tracer
+        if tr is not None:
+            group.lid = tr.next_id()
+            tr.begin("launch", group.lid,
+                     f"launch:{group.workload}/d{group.d_bucket}",
+                     tr.wall_now(), track="device",
+                     args={"live_rows": group.live_rows,
+                           "launched_rows": int(operand_np.shape[0]),
+                           "n_batches": len(group.members)})
         # live_rows counts tenant rows only — batcher zero-pad rows inside a
         # member operand are dead M just like ladder padding, so they must
         # not inflate the achieved-fill telemetry.
@@ -340,7 +355,7 @@ class SliceCoScheduler:
             "workload": group.workload, "d_bucket": group.d_bucket,
             "n_batches": len(group.members), "live_rows": group.live_rows,
             "launched_rows": int(operand_np.shape[0]),
-            "donated": self.donate})
+            "donated": self.donate, "lid": group.lid})
         return group, eng, out
 
     def _materialise(self, group: _LaunchGroup, eng, out):
@@ -348,6 +363,11 @@ class SliceCoScheduler:
         :class:`DispatchResult` per member batch (ladder-pad rows dropped,
         rows routed by position within each member's slice)."""
         res = np.asarray(out)
+        tr = self.tracer
+        if tr is not None:
+            tr.end("launch", group.lid,
+                   f"launch:{group.workload}/d{group.d_bucket}",
+                   tr.wall_now(), track="device")
         # last_stats is trace-time state (one channel's staged_transform);
         # fold_profile is the static whole-program census — deterministic per
         # (workload, d_bucket) and what the serve telemetry aggregates.

@@ -99,9 +99,12 @@ def serve_crypto_online(*, duration_s=0.05, rate_hz=2048, n_c=8,
                         donate=False, async_pipeline=False, warm_start=None,
                         controller=False, holdback_lambda=0.0,
                         inflight_depth=1, compilation_cache_dir=None,
-                        telemetry_out=None, realtime=False, coscheduler=None):
+                        telemetry_out=None, trace_out=None,
+                        realtime=False, coscheduler=None):
     """Closed loop over the online runtime: load generator → admission →
-    continuous batcher → co-scheduled dispatch → per-tenant results."""
+    continuous batcher → co-scheduled dispatch → per-tenant results.
+    ``trace_out`` switches request-lifecycle tracing on and writes the run's
+    Chrome-trace JSON there (open in ui.perfetto.dev)."""
     from repro.core.scheduler import PoissonTrace
     from repro.serve import CryptoServer, LoadGenerator, ServeConfig
 
@@ -119,7 +122,8 @@ def serve_crypto_online(*, duration_s=0.05, rate_hz=2048, n_c=8,
                       controller=controller,
                       holdback_lambda=holdback_lambda,
                       inflight_depth=inflight_depth,
-                      compilation_cache_dir=compilation_cache_dir)
+                      compilation_cache_dir=compilation_cache_dir,
+                      tracing=trace_out is not None)
     server = CryptoServer(cfg, coscheduler=coscheduler)
     gen = LoadGenerator(PoissonTrace(rate_hz=rate_hz, duration_s=duration_s,
                                      uniform_degree=d_uniform, seed=seed),
@@ -129,6 +133,8 @@ def serve_crypto_online(*, duration_s=0.05, rate_hz=2048, n_c=8,
     dt = time.time() - t0
     snap = (server.telemetry.write_json(telemetry_out) if telemetry_out
             else server.telemetry.snapshot())
+    if trace_out:
+        server.write_trace(trace_out)
     return load, snap, dt
 
 
@@ -145,13 +151,14 @@ def serve_crypto_cluster(*, hosts=2, duration_s=0.05, rate_hz=2048, n_c=8,
                          warm_start=None, controller=False,
                          holdback_lambda=0.0, inflight_depth=1,
                          compilation_cache_dir=None,
-                         telemetry_out=None, trace=None,
+                         telemetry_out=None, trace=None, trace_out=None,
                          realtime=False, coscheduler_factory=None):
     """Closed loop over an N-host sharded cluster: tenant-hash ingress →
     per-host admission (gossip-informed SLO gate) → per-host continuous
     batcher → co-scheduled dispatch → two-phase drain barrier → merged
     telemetry.  ``trace`` overrides the Poisson trace (benchmarks pass
-    skewed tenant distributions)."""
+    skewed tenant distributions); ``trace_out`` switches request-lifecycle
+    tracing on and writes the merged fleet Chrome-trace JSON there."""
     from repro.cluster import ClusterConfig, ClusterServer
     from repro.core.scheduler import PoissonTrace
     from repro.serve import LoadGenerator, ServeConfig
@@ -166,7 +173,8 @@ def serve_crypto_cluster(*, hosts=2, duration_s=0.05, rate_hz=2048, n_c=8,
         donate=donate, async_pipeline=async_pipeline, warm_start=warm_start,
         controller=controller, holdback_lambda=holdback_lambda,
         inflight_depth=inflight_depth,
-        compilation_cache_dir=compilation_cache_dir)
+        compilation_cache_dir=compilation_cache_dir,
+        tracing=trace_out is not None)
     cluster = ClusterServer(
         ClusterConfig(n_hosts=hosts, gossip_period_s=gossip_period_s,
                       gossip_staleness_factor=gossip_staleness_factor,
@@ -182,6 +190,8 @@ def serve_crypto_cluster(*, hosts=2, duration_s=0.05, rate_hz=2048, n_c=8,
     dt = time.time() - t0
     snap = (cluster.write_json(telemetry_out) if telemetry_out
             else cluster.snapshot())
+    if trace_out:
+        cluster.write_trace(trace_out)
     return load, snap, dt
 
 
@@ -208,6 +218,10 @@ def main():
                     help="reject requests predicted to queue past this deadline")
     ap.add_argument("--telemetry-out", default=None,
                     help="write the telemetry snapshot JSON here")
+    ap.add_argument("--trace-out", default=None,
+                    help="record request-lifecycle tracing and write the "
+                         "Chrome-trace/Perfetto JSON here (crypto-online "
+                         "and cluster modes; open in ui.perfetto.dev)")
     ap.add_argument("--realtime", action="store_true",
                     help="pace submissions in wall time (default: virtual clock)")
     ap.add_argument("--accum", default="fp32_mantissa",
@@ -277,7 +291,8 @@ def main():
             holdback_lambda=args.holdback_lambda,
             inflight_depth=args.inflight_depth,
             compilation_cache_dir=args.compilation_cache_dir,
-            telemetry_out=args.telemetry_out, realtime=args.realtime)
+            telemetry_out=args.telemetry_out, trace_out=args.trace_out,
+            realtime=args.realtime)
         m = snap["merged"]
         served = sum(1 for h in load.handles if h.done() and not h.rejected)
         print(f"cluster[{args.hosts} hosts]: served {served}/"
@@ -314,6 +329,8 @@ def main():
                   f"{hb['losses']} losses / {hb['flushed']} flushed")
         if args.telemetry_out:
             print(f"cluster telemetry JSON → {args.telemetry_out}")
+        if args.trace_out:
+            print(f"fleet trace → {args.trace_out} (open in ui.perfetto.dev)")
     elif args.mode == "crypto-online":
         load, snap, dt = serve_crypto_online(
             duration_s=args.duration, rate_hz=args.rate, n_c=args.n_c,
@@ -329,7 +346,8 @@ def main():
             holdback_lambda=args.holdback_lambda,
             inflight_depth=args.inflight_depth,
             compilation_cache_dir=args.compilation_cache_dir,
-            telemetry_out=args.telemetry_out, realtime=args.realtime)
+            telemetry_out=args.telemetry_out, trace_out=args.trace_out,
+            realtime=args.realtime)
         lat = snap["latency"]
         print(f"online: served {load.n_served}/{len(load.handles)} requests "
               f"({len(load.rejected)} rejected) in {dt:.2f}s wall, "
@@ -362,6 +380,8 @@ def main():
                   f"{hb['losses']} losses / {hb['flushed']} flushed")
         if args.telemetry_out:
             print(f"telemetry JSON → {args.telemetry_out}")
+        if args.trace_out:
+            print(f"trace → {args.trace_out} (open in ui.perfetto.dev)")
     else:
         results, n_ops, dt = serve_crypto(duration_s=args.duration,
                                           rate_hz=args.rate, n_c=args.n_c)

@@ -1,0 +1,29 @@
+"""repro.obs — unified observability for the serving stack.
+
+Three pillars (the measurement substrate every perf PR is judged against):
+
+* :mod:`tracing`  — low-overhead request-lifecycle tracing: a bounded
+  ring-buffer :class:`Tracer` collecting span/instant/counter events with
+  causal request/batch/launch IDs, emitted by the server, batcher,
+  co-scheduler, and cluster layers (host-tagged in cluster mode);
+* :mod:`export`   — Chrome ``trace_event`` / Perfetto rendering of a trace
+  (open the JSON in https://ui.perfetto.dev), with per-host process tracks,
+  per-class device tracks for launch groups, and counter tracks for queue
+  depth / ring depth / controller setpoints;
+* :mod:`ledger`   — the live penalty ledger: per-launch modeled-cycle
+  attribution into MXU-productive work vs VPU Montgomery-fold stalls
+  (arithmetic penalty, paper §7.2) vs M/K padding (spatial penalty, §7.3)
+  vs host/gather gaps, published in every telemetry snapshot;
+* :mod:`validate` — trace-file schema validator (balanced spans, every
+  request reaching a terminal ``complete``/``reject`` event) — the CI
+  contract for ``--trace-out`` files.
+"""
+from repro.obs.export import chrome_trace, write_chrome_trace
+from repro.obs.ledger import PenaltyLedger, merge_penalty_sections
+from repro.obs.tracing import Tracer
+from repro.obs.validate import validate_chrome_trace
+
+__all__ = [
+    "Tracer", "chrome_trace", "write_chrome_trace", "PenaltyLedger",
+    "merge_penalty_sections", "validate_chrome_trace",
+]

@@ -53,6 +53,7 @@ class _OpenBatch:
     requests: list
     opened_at: float
     sum_degrees: int = 0
+    bid: int = 0             # causal batch ID (0 when tracing is off)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +61,7 @@ class ClosedBatch:
     batch: StackedBatch
     reason: str
     age_s: float             # oldest-row residency at close time
+    batch_id: int = 0        # causal batch ID (0 when tracing is off)
 
 
 class ContinuousBatcher:
@@ -68,7 +70,7 @@ class ContinuousBatcher:
                  max_age_s: float = 0.01,
                  occupancy_close: float | None = None,
                  pad_rows: bool = True,
-                 controller=None):
+                 controller=None, tracer=None):
         self.n_c = n_c
         self.granularity = bucket_granularity
         self.max_age_s = max_age_s
@@ -78,6 +80,10 @@ class ContinuousBatcher:
         # policy below asks it for target rows / age / occupancy instead of
         # using the static values (which become the loop's bounds).
         self.controller = controller
+        # Optional repro.obs.Tracer: open batches become async "batch" spans
+        # whose close event lists the stacked request IDs (the trace's
+        # causal middle link — submit → batch roster → launch).
+        self.tracer = tracer
         self._open: dict[tuple, _OpenBatch] = {}
         self._depth = 0
 
@@ -131,9 +137,15 @@ class ContinuousBatcher:
         """Stack one request; return any batch this add closed."""
         key = (req.workload, self.bucket_for(req.degree))
         ob = self._open.get(key)
+        tr = self.tracer
         if ob is None:
             ob = self._open[key] = _OpenBatch(
                 workload=key[0], d_bucket=key[1], requests=[], opened_at=now)
+            if tr is not None:
+                ob.bid = tr.next_id()
+                tr.begin("batch", ob.bid, f"batch:{key[0]}/d{key[1]}", now,
+                         track="batcher",
+                         args={"workload": key[0], "d_bucket": key[1]})
         ob.requests.append(req)
         ob.sum_degrees += req.degree
         self._depth += 1
@@ -174,9 +186,22 @@ class ContinuousBatcher:
         self._depth -= len(ob.requests)
         if self.controller is not None:
             self.controller.observe_close(key, reason)
+        if self.tracer is not None:
+            # The close event carries the request-id roster — one list per
+            # batch instead of one enqueue instant per request, which is
+            # what keeps tracing O(batches) on the per-request hot path.
+            self.tracer.end("batch", ob.bid, f"batch:{key[0]}/d{key[1]}",
+                            now, track="batcher",
+                            args={"reason": reason,
+                                  "rows": len(ob.requests),
+                                  "rids": [t for r in ob.requests
+                                           if (t := getattr(r, "trace_id",
+                                                            None))
+                                           is not None]})
         operand = stack_rows(ob.requests, ob.d_bucket,
                              n_rows=self.n_c if self.pad_rows else None)
         batch = StackedBatch(workload=ob.workload, d_bucket=ob.d_bucket,
                              requests=ob.requests, operand=operand)
         return ClosedBatch(batch=batch, reason=reason,
-                           age_s=max(0.0, now - ob.opened_at))
+                           age_s=max(0.0, now - ob.opened_at),
+                           batch_id=ob.bid)

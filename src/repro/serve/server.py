@@ -32,6 +32,8 @@ from repro.core import validator as V
 from repro.core.scheduler.coscheduler import (SliceCoScheduler,
                                               default_row_ladder)
 from repro.core.scheduler.rectangular import packing_metrics
+from repro.obs.ledger import PenaltyLedger
+from repro.obs.tracing import Tracer
 from repro.serve.admission import AdmissionController, AdmissionDecision
 from repro.serve.batcher import CLOSE_DRAIN, ClosedBatch, ContinuousBatcher
 from repro.serve.controller import AdaptiveController
@@ -171,6 +173,19 @@ class ServeConfig:
     holdback_lambda: float = 0.0
     holdback_slo_fraction: float = 0.5
     inflight_depth: int = 1
+    # observability (repro.obs): request-lifecycle tracing into a bounded
+    # ring buffer (submit/enqueue/launch/complete spans with causal IDs,
+    # exportable as Chrome-trace JSON via server.trace_events()).  Off by
+    # default — the per-event cost is one dict append, but the buffer is
+    # only useful to callers that export it.  The penalty ledger is always
+    # on: it prices launches from telemetry the server already computes.
+    tracing: bool = False
+    trace_capacity: int = 1 << 16
+    # bound the latency/queue-wait reservoirs: past this many samples each
+    # histogram collapses to a log-bucket sketch (bounded memory, ≤ ~4.5%
+    # relative quantile error; count/mean/max stay exact).  None = exact
+    # reservoir forever (the default — serving runs here are bounded).
+    latency_sketch_bound: int | None = None
     # persistent compile cache: point the JAX compilation cache at this
     # directory so compiled programs survive process restarts — a cold boot
     # then gets the same zero-trace first dispatch an in-process warm start
@@ -253,6 +268,16 @@ class CryptoServer:
                 holdback_lambda=cfg.holdback_lambda,
                 holdback_slo_fraction=cfg.holdback_slo_fraction,
                 slo_deadline_s=cfg.slo_deadline_s)
+        # Observability: one host-tagged tracer shared by the server, the
+        # batcher, and the co-scheduler (so launch spans and lifecycle spans
+        # land on one timeline with one causal-ID sequence).
+        self.tracer = None
+        if cfg.tracing:
+            self.tracer = Tracer(capacity=cfg.trace_capacity,
+                                 host=self.cos.host)
+        # Always (re)assign, so a shared co-scheduler handed from a traced
+        # run to an untraced one doesn't keep feeding the stale tracer.
+        self.cos.tracer = self.tracer
         # With a row ladder the batcher emits mergeable (live-row) operands
         # and the co-scheduler pads once, on the merged operand — padding to
         # N_c here as well would interleave dead rows into super-batches.
@@ -260,14 +285,22 @@ class CryptoServer:
             n_c=cfg.n_c, bucket_granularity=cfg.bucket_granularity,
             max_age_s=cfg.max_age_s, occupancy_close=cfg.occupancy_close,
             pad_rows=cfg.pad_rows and self.cos.row_ladder is None,
-            controller=self.controller)
+            controller=self.controller, tracer=self.tracer)
         self.admission = AdmissionController(
             max_pending=cfg.max_pending, tenant_rate_hz=cfg.tenant_rate_hz,
             tenant_burst=cfg.tenant_burst, slo_deadline_s=cfg.slo_deadline_s)
-        self.telemetry = telemetry or Telemetry()
+        self.telemetry = telemetry or Telemetry(
+            sketch_bound=cfg.latency_sketch_bound)
         if self.controller is not None:
             self.telemetry.attach_section("controller",
                                           self.controller.snapshot)
+        # The live penalty ledger (paper §7 decomposition as a snapshot
+        # section): every launch's modeled cycles split into MXU-productive /
+        # arithmetic-stall / spatial-pad / host-gap bins.
+        self.ledger = PenaltyLedger(m_tile=cfg.n_c_max)
+        self.telemetry.attach_section("penalty", self.ledger.snapshot)
+        if self.tracer is not None:
+            self.telemetry.attach_section("trace", self.tracer.snapshot)
         # Zero-sync pipeline state: batches validated + staged but not yet
         # launched, per-class launch rings of in-flight groups awaiting
         # gather (inflight_depth == 1 keeps the whole event's staged set in
@@ -285,6 +318,8 @@ class CryptoServer:
         # completion (a long-lived server must not accumulate history), and
         # correct when one tenant has several rows in flight.
         self._handles: dict[int, ResponseHandle] = {}
+        self._ledger_profiles: dict[tuple, dict] = {}
+        self._req_span_names: dict[str, str] = {}
         self._validated: set[tuple] = set()
         self._draining = False
         # Cluster hook: when set (by repro.cluster), called as fn(now) and
@@ -323,9 +358,28 @@ class CryptoServer:
                                             pending=self.batcher.depth,
                                             cluster_pending=cluster_pending)
         self.telemetry.record_admission(decision.reason)
+        tr = self.tracer
         if not decision.admitted:
+            if tr is not None:
+                tr.instant("reject", now,
+                           args={"workload": req.workload,
+                                 "reason": decision.reason})
             handle._reject(decision, at=now)
             return handle
+        if tr is not None:
+            # The request span opens at submit and closes at completion; the
+            # causal ID rides on the request object so the batcher can link
+            # it to the batch it lands in.
+            rid = tr.next_id()
+            req.trace_id = rid
+            # Name carries the workload, the batch span carries the d
+            # bucket, the span length is the latency — no per-request args
+            # dict or f-string (this is the hottest emitter in the stack).
+            name = self._req_span_names.get(req.workload)
+            if name is None:
+                name = self._req_span_names.setdefault(
+                    req.workload, "req:" + req.workload)
+            tr.begin("request", rid, name, now)
         self._handles[id(req)] = handle
         self._dispatch(self.batcher.add(req, now), now)
         return handle
@@ -351,7 +405,7 @@ class CryptoServer:
         Holdback release deadlines count: a held batch must be launched at
         its priced window's edge even if no new request ever arrives."""
         deadline = self.batcher.next_deadline()
-        for _, release_at, _ in self._held.values():
+        for _, release_at, _, _ in self._held.values():
             deadline = (release_at if deadline is None
                         else min(deadline, release_at))
         return deadline
@@ -423,6 +477,34 @@ class CryptoServer:
     def _class_key(self, cb: ClosedBatch) -> tuple:
         return (cb.batch.workload, cb.batch.d_bucket)
 
+    def _ledger_profile(self, workload: str, d: int) -> dict:
+        """Engine fold profile + limb counts — the penalty ledger's static
+        per-class pricing inputs (cached: this sits on the dispatch path)."""
+        key = (workload, d)
+        prof = self._ledger_profiles.get(key)
+        if prof is None:
+            eng = self.cos.engine_for(workload, d)
+            prof = dict(eng.fold_profile)
+            prof["data_limbs"] = eng.wclass.data_limbs
+            prof["tw_limbs"] = eng.wclass.tw_limbs
+            self._ledger_profiles[key] = prof
+        return prof
+
+    # --- observability export -------------------------------------------------
+
+    def trace_events(self) -> list[dict]:
+        """The tracer's buffered events (empty when tracing is off)."""
+        return [] if self.tracer is None else self.tracer.event_dicts()
+
+    def write_trace(self, path: str) -> dict:
+        """Export the buffered trace as Chrome-trace JSON (Perfetto-ready).
+        Requires ``tracing=True`` in the config."""
+        if self.tracer is None:
+            raise RuntimeError("tracing is off — construct the server with "
+                               "ServeConfig(tracing=True) to record a trace")
+        from repro.obs.export import write_chrome_trace
+        return write_chrome_trace(path, self.trace_events())
+
     def _apply_holdback(self, closed: list[ClosedBatch], now: float,
                         final: bool) -> list[ClosedBatch]:
         """The λ-priced merge holdback: decide, per newly closed batch,
@@ -436,19 +518,25 @@ class CryptoServer:
         if not self._held and (self.controller is None
                                or self.config.holdback_lambda <= 0):
             return closed
+        tr = self.tracer
+
+        def _release(held_at, hid, outcome):
+            self.telemetry.record_holdback(outcome, hold_s=now - held_at)
+            if tr is not None:
+                tr.end("holdback", hid, "hold", now, track="holdback",
+                       args={"outcome": outcome})
+
         out: list[ClosedBatch] = []
         if final:
-            for cb, _, held_at in self._held.values():
-                self.telemetry.record_holdback("flushed",
-                                               hold_s=now - held_at)
+            for cb, _, held_at, hid in self._held.values():
+                _release(held_at, hid, "flushed")
                 out.append(cb)
             self._held.clear()
         else:
-            for key in [k for k, (_, rel, _) in self._held.items()
+            for key in [k for k, (_, rel, _, _) in self._held.items()
                         if rel <= now]:
-                cb, _, held_at = self._held.pop(key)
-                self.telemetry.record_holdback("losses",
-                                               hold_s=now - held_at)
+                cb, _, held_at, hid = self._held.pop(key)
+                _release(held_at, hid, "losses")
                 out.append(cb)
         for cb in closed:
             key = self._class_key(cb)
@@ -456,8 +544,7 @@ class CryptoServer:
             if held is not None:
                 # The predicted partner materialised: launch both together
                 # (launch_mixed coalesces them along M into one tall group).
-                self.telemetry.record_holdback("wins",
-                                               hold_s=now - held[2])
+                _release(held[2], held[3], "wins")
                 out.append(held[0])
                 out.append(cb)
                 continue
@@ -468,7 +555,15 @@ class CryptoServer:
             window = self.controller.holdback_window_s(key, cb.age_s)
             if window > 0.0:
                 self.telemetry.record_holdback("held", rows=cb.batch.n_c)
-                self._held[key] = (cb, now + window, now)
+                hid = 0
+                if tr is not None:
+                    hid = tr.next_id()
+                    tr.begin("holdback", hid,
+                             f"hold:{key[0]}/d{key[1]}", now,
+                             track="holdback",
+                             args={"rows": cb.batch.n_c,
+                                   "window_s": window})
+                self._held[key] = (cb, now + window, now, hid)
             else:
                 out.append(cb)
         return out
@@ -525,6 +620,11 @@ class CryptoServer:
         in-flight results.  ``final`` forces a full flush (drain): holdback
         pen emptied, every ring retired in launch order, zero groups left
         in flight."""
+        tr = self.tracer
+        if tr is not None:
+            # Pin wall-clock emitters (launch spans) to this serving event's
+            # clock so the whole trace shares one timeline.
+            tr.anchor(now)
         if self.config.validate:
             for cb in closed:
                 self._validate_once(cb.batch)
@@ -533,25 +633,35 @@ class CryptoServer:
             if self._staged:
                 staged, self._staged = self._staged, []
                 self._finish(staged, *self._launch(staged), now)
-            return
-        launched_keys = set()
-        if self._staged:
-            staged, self._staged = self._staged, []
-            launched_keys = self._launch_staged(staged)
-        if final:
-            # Retire the full ring in launch order — drain leaves nothing
-            # in flight (the cluster barrier counts on it).
-            while (ring := self._oldest_ring()) is not None:
-                self._finish(*ring.popleft()[1:], now)
-            return
-        depth = self.config.inflight_depth
-        for key, ring in self._rings.items():
-            # Gather *after* the new launches are enqueued: the device
-            # starts the next group while the host materialises these.
-            while len(ring) > depth:
-                self._finish(*ring.popleft()[1:], now)
-            if key not in launched_keys and ring:
-                self._finish(*ring.popleft()[1:], now)
+        else:
+            launched_keys = set()
+            if self._staged:
+                staged, self._staged = self._staged, []
+                launched_keys = self._launch_staged(staged)
+            if final:
+                # Retire the full ring in launch order — drain leaves
+                # nothing in flight (the cluster barrier counts on it).
+                while (ring := self._oldest_ring()) is not None:
+                    self._finish(*ring.popleft()[1:], now)
+            else:
+                depth = self.config.inflight_depth
+                for key, ring in self._rings.items():
+                    # Gather *after* the new launches are enqueued: the
+                    # device starts the next group while the host
+                    # materialises these.
+                    while len(ring) > depth:
+                        self._finish(*ring.popleft()[1:], now)
+                    if key not in launched_keys and ring:
+                        self._finish(*ring.popleft()[1:], now)
+        if tr is not None and (closed or final):
+            # Counters are a sampled timeline, not causal data: sampling at
+            # batch-close/drain boundaries keeps the sawtooth visible at the
+            # granularity that matters while costing O(batches), not
+            # O(requests), events (the tracing-overhead gate in
+            # bench_dispatch counts on this).
+            tr.counter("queue_depth", now, self.batcher.depth)
+            tr.counter("inflight_groups", now, self.inflight_groups)
+            tr.counter("held_batches", now, len(self._held))
 
     def _launch(self, staged: list[ClosedBatch]):
         t0 = time.perf_counter()
@@ -575,23 +685,55 @@ class CryptoServer:
         # launch group; per-batch device timing is not observable from here).
         total_rows = sum(cb.batch.n_c for cb in closed) or 1
         self.admission.observe_service(total_rows, service_s)
+        tr = self.tracer
+        if tr is not None:
+            # Causal middle link: which closed batches rode which launch.
+            for group, _, _ in flight.groups:
+                tr.instant("launch_batches", now, track="device",
+                           args={"lid": group.lid,
+                                 "bids": [closed[idx].batch_id
+                                          for idx, _, _, _ in group.members]})
         cluster_depth = None
         if self.controller is not None and self.cluster_depth_fn is not None:
             # Fold the gossiped fleet depth into the control setpoint (the
             # bounded-staleness contract is enforced inside the view merge,
             # so the controller can never consume an over-age digest).
             cluster_depth = self.cluster_depth_fn(now)
+        # Packing metrics before the launch loop: the penalty ledger prices
+        # each launch's K under-fill from the live-row-weighted mean K
+        # occupancy of the batches that rode its class.
+        batch_metrics = []
+        class_k: dict = {}
+        for cb in closed:
+            batch = cb.batch
+            eng = self.cos.engine_for(batch.workload, batch.d_bucket)
+            d_max = (eng.plan.d_max if hasattr(eng, "plan")
+                     else eng.plans[0].d_max)
+            m = packing_metrics(batch.degrees, batch.d_bucket, d_max,
+                                n_c_max=self.config.n_c_max)
+            batch_metrics.append((cb, eng, m))
+            acc = class_k.setdefault((batch.workload, batch.d_bucket),
+                                     [0.0, 0])
+            acc[0] += m.k_occupancy * batch.n_c
+            acc[1] += batch.n_c
+        total_live = sum(e["live_rows"] for e in log) or 1
         for entry in log:
             live, launched = entry["live_rows"], entry["launched_rows"]
+            key = (entry["workload"], entry["d_bucket"])
             if self.controller is not None:
                 # Per-class backlog: the global batcher depth would let a
                 # busy neighbour class snap this class's target rung to the
                 # ladder top and mis-price its holdback windows.
                 self.controller.observe_dispatch(
-                    (entry["workload"], entry["d_bucket"]), live_rows=live,
-                    queue_depth=self.batcher.class_depth(
-                        (entry["workload"], entry["d_bucket"])), now=now,
+                    key, live_rows=live,
+                    queue_depth=self.batcher.class_depth(key), now=now,
                     cluster_depth=cluster_depth)
+                if tr is not None:
+                    w, b = key
+                    tr.counter(f"target_rows[{w}/d{b}]", now,
+                               self.controller.target_rows(key))
+                    tr.counter(f"max_age_s[{w}/d{b}]", now,
+                               self.controller.max_age_s(key))
             self.telemetry.record_dispatch(DispatchRecord(
                 workload=entry["workload"], d_bucket=entry["d_bucket"],
                 n_batches=entry["n_batches"], live_rows=live,
@@ -599,14 +741,17 @@ class CryptoServer:
                 m_occupancy=min(1.0, live / self.config.n_c_max),
                 m_fill=live / launched if launched else 0.0,
                 donated=entry["donated"]))
-        for cb, res in zip(closed, results):
+            acc = class_k.get(key)
+            self.ledger.observe_launch(
+                workload=entry["workload"], d=entry["d_bucket"],
+                live_rows=live, launched_rows=launched,
+                n_batches=entry["n_batches"],
+                service_s=service_s * live / total_live,
+                profile=self._ledger_profile(*key),
+                k_occupancy=(acc[0] / acc[1]) if acc and acc[1] else 1.0)
+        for (cb, eng, m), res in zip(batch_metrics, results):
             batch = cb.batch
             share = service_s * batch.n_c / total_rows
-            eng = self.cos.engine_for(batch.workload, batch.d_bucket)
-            d_max = (eng.plan.d_max if hasattr(eng, "plan")
-                     else eng.plans[0].d_max)
-            m = packing_metrics(batch.degrees, batch.d_bucket, d_max,
-                                n_c_max=self.config.n_c_max)
             self.telemetry.record_batch(BatchRecord(
                 workload=batch.workload, d_bucket=batch.d_bucket,
                 n_c=batch.n_c, close_reason=cb.reason,
@@ -624,3 +769,6 @@ class CryptoServer:
                 handle._resolve(res.rows[i], completed)
                 self.telemetry.observe_latency(
                     handle.latency_s, queue_wait_s=now - handle.submitted_at)
+                rid = getattr(r, "trace_id", None)
+                if tr is not None and rid is not None:
+                    tr.end("request", rid, "complete", completed)

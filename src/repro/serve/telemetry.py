@@ -10,31 +10,92 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 
 
 class LatencyHistogram:
-    """Exact-sample latency reservoir with interpolated percentiles.
+    """Latency reservoir with interpolated percentiles.
 
-    Serving runs here are bounded (seconds of trace, thousands of requests),
-    so exact samples beat bucketed approximations; swap in a log-bucketed
-    sketch if traces ever outgrow memory.
+    Exact by default: serving runs here are bounded (seconds of trace,
+    thousands of requests), so exact samples beat bucketed approximations.
+    For traces that outgrow the reservoir, pass ``sketch_bound``: once the
+    sample count exceeds it the reservoir collapses into log-spaced buckets
+    (ratio :data:`GAMMA` per bucket → ≤ ~4.5% relative quantile error) with
+    bounded memory; count / mean / max stay exact in either mode.  The
+    cluster merge (:mod:`repro.cluster.telemetry`) stays exact only while
+    every host is still exact — any sketched host flips ``merged_exact``
+    off and the merge proceeds bucket-wise.
     """
 
-    def __init__(self):
+    GAMMA = 2.0 ** 0.125     # 12 buckets per octave of latency
+
+    def __init__(self, sketch_bound: int | None = None):
+        if sketch_bound is not None and sketch_bound < 1:
+            raise ValueError(f"sketch_bound must be ≥ 1, got {sketch_bound}")
+        self.sketch_bound = sketch_bound
         self._samples: list[float] = []
+        self._sorted = True
+        self._buckets: dict[int, int] | None = None   # log-bucket counts
+        self._zero = 0          # samples ≤ 0 (virtual clocks produce them)
+        self._count = 0
+        self._sum = 0.0
+        self._max = 0.0
+
+    @property
+    def sketching(self) -> bool:
+        return self._buckets is not None
+
+    def _bucket_of(self, x: float) -> int:
+        return math.floor(math.log(x) / math.log(self.GAMMA))
+
+    def _collapse(self):
+        """Exact reservoir → log-bucket sketch (one-way, on overflow)."""
+        self._buckets = {}
+        for x in self._samples:
+            if x <= 0.0:
+                self._zero += 1
+            else:
+                b = self._bucket_of(x)
+                self._buckets[b] = self._buckets.get(b, 0) + 1
+        self._samples = []
         self._sorted = True
 
     def observe(self, seconds: float):
-        self._samples.append(float(seconds))
+        x = float(seconds)
+        self._count += 1
+        self._sum += x
+        self._max = max(self._max, x)
+        if self._buckets is not None:
+            if x <= 0.0:
+                self._zero += 1
+            else:
+                b = self._bucket_of(x)
+                self._buckets[b] = self._buckets.get(b, 0) + 1
+            return
+        self._samples.append(x)
         self._sorted = False
+        if (self.sketch_bound is not None
+                and len(self._samples) > self.sketch_bound):
+            self._collapse()
 
     def __len__(self) -> int:
-        return len(self._samples)
+        return self._count
 
     def percentile(self, q: float) -> float:
-        """Linear-interpolated quantile, q in [0, 100]."""
-        if not self._samples:
+        """Quantile, q in [0, 100]: linear-interpolated over exact samples,
+        or the geometric bucket midpoint once sketching."""
+        if not self._count:
             return 0.0
+        if self._buckets is not None:
+            rank = (q / 100.0) * (self._count - 1)
+            seen = self._zero
+            if rank < seen:
+                return 0.0
+            for b in sorted(self._buckets):
+                seen += self._buckets[b]
+                if rank < seen:
+                    return min(self.GAMMA ** (b + 0.5), self._max)
+            return self._max
         if not self._sorted:
             self._samples.sort()
             self._sorted = True
@@ -47,27 +108,44 @@ class LatencyHistogram:
 
     @property
     def samples(self) -> list[float]:
-        """Sorted copy of the raw samples (the mergeable representation)."""
+        """Sorted copy of the raw samples (the exactly-mergeable
+        representation) — unavailable once collapsed to a sketch."""
+        if self._buckets is not None:
+            raise RuntimeError("histogram collapsed to a sketch at "
+                               f"sketch_bound={self.sketch_bound}: exact "
+                               "samples are gone; merge via the 'sketch' "
+                               "summary section instead")
         if not self._sorted:
             self._samples.sort()
             self._sorted = True
         return list(self._samples)
 
+    def sketch_state(self) -> dict:
+        """The mergeable bucket representation (JSON-safe string keys)."""
+        return {"gamma": self.GAMMA, "zero": self._zero,
+                "buckets": {str(b): n
+                            for b, n in sorted(self._buckets.items())}}
+
     def summary(self, include_samples: bool = False) -> dict:
-        n = len(self._samples)
+        n = self._count
         out = {
             "count": n,
-            "mean_s": (sum(self._samples) / n) if n else 0.0,
+            "mean_s": (self._sum / n) if n else 0.0,
             "p50_s": self.percentile(50),
             "p95_s": self.percentile(95),
             "p99_s": self.percentile(99),
-            "max_s": self.percentile(100),
+            "max_s": self._max if n else 0.0,
         }
         if include_samples:
             # Cluster mode: per-host snapshots carry the raw samples so the
             # merged cluster quantiles are exact (quantiles of summaries are
-            # not mergeable; quantiles of concatenated samples are).
-            out["samples"] = self.samples
+            # not mergeable; quantiles of concatenated samples are).  A
+            # sketched host exports its buckets instead — still mergeable,
+            # no longer exact.
+            if self._buckets is not None:
+                out["sketch"] = self.sketch_state()
+            else:
+                out["samples"] = self.samples
         return out
 
 
@@ -113,11 +191,11 @@ class Telemetry:
 
     HOLDBACK_EVENTS = ("held", "wins", "losses", "flushed")
 
-    def __init__(self):
+    def __init__(self, sketch_bound: int | None = None):
         self.batches: list[BatchRecord] = []
         self.dispatches: list[DispatchRecord] = []
-        self.latency = LatencyHistogram()
-        self.queue_wait = LatencyHistogram()
+        self.latency = LatencyHistogram(sketch_bound=sketch_bound)
+        self.queue_wait = LatencyHistogram(sketch_bound=sketch_bound)
         self.admission_counts: dict[str, int] = {}
         self._queue_depth_sum = 0
         self._queue_depth_max = 0
@@ -177,16 +255,24 @@ class Telemetry:
         for rec in self.batches:
             w = per_workload.setdefault(rec.workload, {
                 "batches": 0, "requests": 0, "k_occupancy_sum": 0.0,
-                "m_occupancy_sum": 0.0, "reduction": rec.reduction,
+                "m_occupancy_sum": 0.0, "reduction_batches": {},
                 "folds": 0})
             w["batches"] += 1
             w["requests"] += rec.n_c
             w["k_occupancy_sum"] += rec.k_occupancy
             w["m_occupancy_sum"] += rec.m_occupancy
             w["folds"] += rec.n_folds
+            w["reduction_batches"][rec.reduction] = (
+                w["reduction_batches"].get(rec.reduction, 0) + 1)
         for w in per_workload.values():
             w["k_occupancy_mean"] = w.pop("k_occupancy_sum") / w["batches"]
             w["m_occupancy_mean"] = w.pop("m_occupancy_sum") / w["batches"]
+            # Derived label: the single fold discipline when the class is
+            # uniform, "mixed" otherwise (a class can change discipline
+            # mid-run, e.g. a reconfigured slice — the old field silently
+            # reported whichever mode the first batch happened to use).
+            modes = sorted(w["reduction_batches"])
+            w["reduction"] = modes[0] if len(modes) == 1 else "mixed"
         reasons: dict[str, int] = {}
         for rec in self.batches:
             reasons[rec.close_reason] = reasons.get(rec.close_reason, 0) + 1

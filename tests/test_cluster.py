@@ -321,15 +321,66 @@ def test_merge_without_samples_is_flagged_approximate():
     assert merged["latency"]["count"] == sum(len(t.latency) for t in parts)
 
 
-def test_merge_rejects_cross_host_reduction_disagreement():
+def test_merge_mixed_cross_host_reduction_modes():
+    """Hosts running the same workload under different fold disciplines
+    merge per-mode batch counts; the derived label reads "mixed" (a single
+    agreeing mode keeps its own name)."""
     a, b = Telemetry(), Telemetry()
     rec = dict(workload="dilithium", d_bucket=64, n_c=1, close_reason="full",
                m_occupancy=0.5, k_occupancy=0.5, queue_depth=0,
                service_s=1e-3, age_s=1e-3)
     a.record_batch(BatchRecord(reduction="lazy", n_folds=1, **rec))
+    a.record_batch(BatchRecord(reduction="lazy", n_folds=1, **rec))
     b.record_batch(BatchRecord(reduction="eager", n_folds=9, **rec))
-    with pytest.raises(ValueError, match="cluster-uniform"):
-        merge_snapshots([a.snapshot(), b.snapshot()])
+    merged = merge_snapshots([a.snapshot(), b.snapshot()])
+    w = merged["per_workload"]["dilithium"]
+    assert w["reduction_batches"] == {"lazy": 2, "eager": 1}
+    assert w["reduction"] == "mixed"
+    agree = merge_snapshots([a.snapshot(), a.snapshot()])
+    assert agree["per_workload"]["dilithium"]["reduction"] == "lazy"
+
+
+def test_merge_degenerate_hosts():
+    """The fleet merge must survive hosts that served nothing: zero batches,
+    empty histograms, and snapshots missing whole sections."""
+    busy, idle = Telemetry(), Telemetry()
+    busy.record_batch(BatchRecord(
+        workload="dilithium", d_bucket=64, n_c=2, close_reason="full",
+        m_occupancy=0.5, k_occupancy=0.75, queue_depth=1,
+        service_s=1e-3, age_s=1e-3, reduction="eager", n_folds=9))
+    busy.observe_latency(0.01, queue_wait_s=0.002)
+    merged = merge_snapshots([busy.snapshot(include_samples=True),
+                              idle.snapshot(include_samples=True)])
+    assert merged["batches"] == 1
+    assert merged["requests_served"] == 2
+    assert merged["latency"]["count"] == 1
+    assert merged["latency"]["merged_exact"] is True
+    assert merged["k_occupancy_mean"] == pytest.approx(0.75)
+    w = merged["per_workload"]["dilithium"]
+    assert w["batches"] == 1 and w["reduction"] == "eager"
+    # an all-idle fleet merges to zeros, not a crash
+    empty = merge_snapshots([idle.snapshot(), idle.snapshot()])
+    assert empty["batches"] == 0 and empty["per_workload"] == {}
+    assert empty["latency"]["count"] == 0
+    assert empty["penalty"] == {}
+
+
+def test_merge_legacy_host_sections():
+    """Hosts predating a section (no penalty ledger, scalar ``reduction``
+    label instead of per-mode counts) contribute what they have."""
+    busy = Telemetry()
+    busy.record_batch(BatchRecord(
+        workload="dilithium", d_bucket=64, n_c=1, close_reason="full",
+        m_occupancy=0.5, k_occupancy=0.5, queue_depth=0,
+        service_s=1e-3, age_s=1e-3, reduction="eager", n_folds=9))
+    legacy = busy.snapshot(include_samples=True)
+    legacy.pop("penalty", None)
+    legacy["per_workload"]["dilithium"].pop("reduction_batches", None)
+    merged = merge_snapshots([busy.snapshot(include_samples=True), legacy])
+    w = merged["per_workload"]["dilithium"]
+    assert w["reduction_batches"] == {"eager": 2}
+    assert w["reduction"] == "eager"
+    assert merged["batches"] == 2
 
 
 def test_load_imbalance_metrics():
