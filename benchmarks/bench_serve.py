@@ -11,6 +11,11 @@ the latency knee sits relative to the occupancy the batcher can sustain.
       [--controller [--holdback-lambda 1.5] [--inflight-depth 2]]
       [--dry-run]
 
+``--tenant-frontier`` switches to the ingress-scale benchmark instead: the
+sustained admitted-requests/s × tenant-count frontier (10⁴–10⁶ distinct
+tenants) of the columnar vectorised admission edge vs the scalar oracle,
+with bit-identical decisions asserted (``tenant_frontier()``).
+
 Also exposes ``run()`` yielding the aggregator's CSV rows.
 """
 from __future__ import annotations
@@ -90,6 +95,91 @@ def sweep(rates=(512, 1024, 2048), *, duration_s=0.02, n_c=8,
     return points
 
 
+def tenant_frontier(tenant_counts=(10_000, 100_000, 1_000_000), *,
+                    arrival_batch=8192, revisit_fraction=0.25,
+                    tenant_rate_hz=4.0, tenant_burst=2.0,
+                    slo_deadline_s=0.25, service_rate_init=1e6,
+                    seed=0) -> list[dict]:
+    """Sustained admitted-requests/s × tenant-count frontier (10⁴–10⁶
+    distinct tenants): the columnar vectorised admission edge vs the scalar
+    per-request oracle on the same trace, with bit-identical decisions
+    asserted point by point.
+
+    Each point replays ``n_tenants × (1 + revisit_fraction)`` arrivals
+    (every tenant once, plus a uniform revisit tail so the duplicate-tenant
+    rounds of the vector path are exercised) through ``admit_batch`` in
+    ``arrival_batch``-sized chunks against a drained queue — the steady
+    state where admission itself, not dispatch, is the contended resource
+    (the paper's §7.4 overload regime at production tenant counts).  All
+    three gates stay armed; the token bucket does the per-tenant work.
+    """
+    import numpy as np
+
+    from repro.serve.admission import AdmissionController
+
+    points = []
+    for nt in tenant_counts:
+        rng = np.random.default_rng(seed)
+        n = int(nt * (1.0 + revisit_fraction))
+        ids = np.concatenate([rng.permutation(nt),
+                              rng.integers(0, nt, n - nt)])
+        rng.shuffle(ids)
+        ts = np.linspace(0.0, 1.0, n)
+        kw = dict(max_pending=2 * arrival_batch,
+                  tenant_rate_hz=tenant_rate_hz, tenant_burst=tenant_burst,
+                  slo_deadline_s=slo_deadline_s,
+                  service_rate_init=service_rate_init)
+        runs = {}
+        for columnar in (False, True):
+            ctl = AdmissionController(columnar=columnar, **kw)
+            chunks = []
+            t0 = time.perf_counter()
+            for lo in range(0, n, arrival_batch):
+                chunks.append(ctl.admit_batch(ids[lo:lo + arrival_batch],
+                                              ts[lo:lo + arrival_batch],
+                                              pending=0))
+            runs[columnar] = (time.perf_counter() - t0, chunks)
+        wall_s, dec_s = runs[False]
+        wall_v, dec_v = runs[True]
+        equal = all(
+            np.array_equal(a.admitted, b.admitted)
+            and np.array_equal(a.reason_codes, b.reason_codes)
+            and np.array_equal(a.retry_after_s, b.retry_after_s)
+            for a, b in zip(dec_s, dec_v))
+        admitted = sum(d.n_admitted for d in dec_v)
+        points.append({
+            "config": f"frontier_nt{nt}",
+            "n_tenants": nt,
+            "n_requests": n,
+            "arrival_batch": arrival_batch,
+            "revisit_fraction": revisit_fraction,
+            "tenant_rate_hz": tenant_rate_hz,
+            "tenant_burst": tenant_burst,
+            "admitted": admitted,
+            "rejected": n - admitted,
+            "decisions_equal": bool(equal),
+            "scalar_wall_s": wall_s,
+            "columnar_wall_s": wall_v,
+            "scalar_admitted_per_s": admitted / wall_s if wall_s > 0 else 0.0,
+            "admitted_per_s": admitted / wall_v if wall_v > 0 else 0.0,
+            "speedup": wall_s / wall_v if wall_v > 0 else 0.0,
+        })
+    return points
+
+
+def frontier_dry_run() -> list[dict]:
+    """CI smoke for the tenant frontier: one tiny point; asserts the
+    columnar path emitted bit-identical decisions and actually beat the
+    scalar oracle (any margin — the committed-record floor is the real
+    gate, this catches wiring rot)."""
+    points = tenant_frontier(tenant_counts=(2000,), arrival_batch=512)
+    pt = points[0]
+    assert pt["decisions_equal"], pt
+    assert pt["admitted"] > 0, pt
+    assert pt["speedup"] > 1.0, pt
+    return points
+
+
 def _make_warm_coscheduler(*, n_c, merge_dispatch, row_ladder_max, donate,
                            async_pipeline):
     """One co-scheduler shared across the sweep, pre-warmed so the recorded
@@ -164,12 +254,49 @@ def main():
     ap.add_argument("--trace-out", default=None,
                     help="record request-lifecycle tracing on one sweep "
                          "point and write the Perfetto JSON here")
+    ap.add_argument("--tenant-frontier", action="store_true",
+                    help="measure the admitted-requests/s × tenant-count "
+                         "frontier of the columnar admission edge instead "
+                         "of the serving-rate sweep")
+    ap.add_argument("--tenant-counts", default="10000,100000,1000000",
+                    help="tenant-count ladder for --tenant-frontier")
+    ap.add_argument("--arrival-batch", type=int, default=8192,
+                    help="submit_many chunk size for --tenant-frontier")
     ap.add_argument("--dry-run", action="store_true",
                     help="tiny traced sweep + trace-schema / penalty-"
-                         "conservation asserts (CI)")
+                         "conservation asserts (CI); with --tenant-frontier, "
+                         "a tiny frontier point with parity + speedup "
+                         "asserts instead")
     args = ap.parse_args()
 
     from benchmarks.common import parse_rate_ladder, perf_record
+
+    if args.tenant_frontier:
+        if args.dry_run:
+            points = frontier_dry_run()
+            pt = points[0]
+            print(f"frontier dry run ok: {pt['n_tenants']} tenants, "
+                  f"{pt['admitted']}/{pt['n_requests']} admitted, "
+                  f"decisions bit-identical, speedup {pt['speedup']:.1f}x "
+                  f"({pt['admitted_per_s']:,.0f} admitted/s columnar vs "
+                  f"{pt['scalar_admitted_per_s']:,.0f}/s scalar)")
+            return
+        counts = parse_rate_ladder(args.tenant_counts)
+        # warm pre-run on the smallest count: numpy/interpreter warm-up off
+        # the record, same as the sweep's compile warm-up
+        tenant_frontier(tenant_counts=counts[:1],
+                        arrival_batch=args.arrival_batch)
+        points = tenant_frontier(tenant_counts=counts,
+                                 arrival_batch=args.arrival_batch)
+        doc = perf_record("serve", points)
+        text = json.dumps(doc, indent=2, sort_keys=True)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(text)
+            print(f"wrote {len(points)} frontier points → {args.out}")
+        else:
+            print(text)
+        return
 
     if args.dry_run:
         doc = dry_run(trace_out=args.trace_out)

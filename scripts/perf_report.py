@@ -181,6 +181,65 @@ def run_bench_diff(args) -> int:
     return 0
 
 
+# --- ingress frontier acceptance gate -----------------------------------------
+
+def check_frontier(args) -> int:
+    """Acceptance gate on the committed tenant-frontier points
+    (``bench_serve --tenant-frontier``): every ``frontier_*`` point must
+    carry bit-identical scalar/columnar decisions, a columnar speedup of at
+    least ``--frontier-speedup-floor``, and — when ``--frontier-floor`` is
+    set — a sustained admitted-requests/s at or above it.  The numbers are
+    read from the committed record (or ``--candidate``), so the gate is a
+    deterministic check of the claims the repo ships, not a re-measurement
+    on whatever machine CI landed on."""
+    if args.candidate:
+        if not os.path.exists(args.candidate):
+            print(f"candidate record {args.candidate} does not exist",
+                  file=sys.stderr)
+            return 2
+        doc, origin = load_record(args.candidate), args.candidate
+    else:
+        doc = load_committed_record(args.bench, args.baseline_rev)
+        origin = f"{args.baseline_rev}:BENCH_{args.bench}.json"
+        if doc is None:
+            print(f"no committed BENCH_{args.bench}.json at "
+                  f"{args.baseline_rev}", file=sys.stderr)
+            return 2
+    pts = [p for p in doc["points"]
+           if str(p.get("config", "")).startswith("frontier_")]
+    print(f"=== frontier gate on {origin} "
+          f"(speedup ≥ {args.frontier_speedup_floor:g}x"
+          + (f", admitted/s ≥ {args.frontier_floor:,.0f}"
+             if args.frontier_floor else "") + ") ===")
+    if not pts:
+        print("FAIL: record has no frontier_* points — run "
+              "bench_serve --tenant-frontier and commit them",
+              file=sys.stderr)
+        return 1
+    failures = 0
+    for p in sorted(pts, key=lambda p: p.get("n_tenants", 0)):
+        probs = []
+        if not p.get("decisions_equal"):
+            probs.append("decisions differ from scalar oracle")
+        if p.get("speedup", 0.0) < args.frontier_speedup_floor:
+            probs.append(f"speedup {p.get('speedup', 0.0):.2f}x below floor")
+        if (args.frontier_floor
+                and p.get("admitted_per_s", 0.0) < args.frontier_floor):
+            probs.append(f"admitted/s {p.get('admitted_per_s', 0.0):,.0f} "
+                         f"below floor")
+        mark = "FAIL " + "; ".join(probs) if probs else "ok"
+        failures += bool(probs)
+        print(f"  {p['config']:<22} {p.get('n_tenants', 0):>9,} tenants  "
+              f"{p.get('admitted_per_s', 0.0):>12,.0f} admitted/s  "
+              f"{p.get('speedup', 0.0):>6.1f}x  {mark}")
+    if failures:
+        print(f"FAIL: {failures} frontier point(s) below the acceptance "
+              f"floor", file=sys.stderr)
+        return 1
+    print(f"{len(pts)} frontier point(s) meet the acceptance floor")
+    return 0
+
+
 # --- legacy §Perf artifact report ---------------------------------------------
 
 def load(arch, shape, mesh="single", tag=""):
@@ -246,10 +305,25 @@ def main() -> int:
     ap.add_argument("--dry-run", action="store_true",
                     help="tolerate missing records (CI-safe); measured "
                          "regressions on comparable envs still fail")
+    ap.add_argument("--check-frontier", action="store_true",
+                    help="gate the committed tenant-frontier points "
+                         "(decisions parity + speedup/admitted-rate floors) "
+                         "instead of diffing rows_per_s")
+    ap.add_argument("--frontier-floor", type=float, default=0.0,
+                    help="minimum committed admitted-requests/s per "
+                         "frontier point (0 = parity + speedup only)")
+    ap.add_argument("--frontier-speedup-floor", type=float, default=5.0,
+                    help="minimum committed columnar-vs-scalar speedup per "
+                         "frontier point")
     ap.add_argument("--legacy-artifacts", action="store_true",
                     help="print the §Perf roofline artifact report instead")
     args = ap.parse_args()
 
+    if args.check_frontier:
+        if args.bench is None:
+            ap.error("--check-frontier needs --bench (which BENCH record "
+                     "holds the frontier points, e.g. 'serve')")
+        return check_frontier(args)
     if args.bench is None and args.candidate is not None:
         ap.error("--candidate needs --bench (which BENCH record to diff); "
                  "refusing to silently fall back to the artifact report")

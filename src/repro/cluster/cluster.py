@@ -100,15 +100,18 @@ class ClusterServer:
 
     def _make_depth_fn(self, host_id: int):
         def depth_fn(now: float) -> float:
+            # pending_load, not batcher.depth: held and in-flight rows
+            # occupy the slice just as queued ones do (holdback-aware
+            # admission), locally and in the published digests alike.
             view = self.gossip.cluster_view(
-                host_id, self.hosts[host_id].batcher.depth, now)
+                host_id, self.hosts[host_id].pending_load, now)
             return view.per_host_equiv
         return depth_fn
 
     def _tick(self, now: float):
         """Run every due gossip publish (period-gated per host)."""
         for h, srv in enumerate(self.hosts):
-            self.gossip.maybe_publish(h, srv.batcher.depth, now,
+            self.gossip.maybe_publish(h, srv.pending_load, now,
                                       open_batches=srv.batcher.open_batches)
 
     # --- the CryptoServer-shaped surface --------------------------------------
@@ -119,6 +122,29 @@ class ClusterServer:
         host = self.router.host_for(req.tenant_id)
         self._submissions[host] += 1
         return self.hosts[host].submit(req, now=now)
+
+    def submit_many(self, reqs, now: float | None = None, nows=None):
+        """Batch ingress: shard one arrival batch by the tenant-hash router
+        and feed each host's share through its vectorised ``submit_many``
+        edge (arrival order preserved within a host; handles returned in the
+        original batch order)."""
+        now = time.monotonic() if now is None else now
+        if nows is None:
+            nows = [now] * len(reqs)
+        self._tick(float(nows[0]) if len(reqs) else now)
+        shard_pos: dict[int, list[int]] = {}
+        for p, req in enumerate(reqs):
+            host = self.router.host_for(req.tenant_id)
+            shard_pos.setdefault(host, []).append(p)
+        handles = [None] * len(reqs)
+        for host, positions in shard_pos.items():
+            self._submissions[host] += len(positions)
+            hs = self.hosts[host].submit_many(
+                [reqs[p] for p in positions],
+                nows=[nows[p] for p in positions])
+            for p, h in zip(positions, hs):
+                handles[p] = h
+        return handles
 
     def pump(self, now: float | None = None) -> int:
         now = time.monotonic() if now is None else now

@@ -72,6 +72,7 @@ class GossipBus:
         self.publishes = 0
         self.views = 0
         self.stale_drops = 0
+        self.pruned_digests = 0
         self._used_staleness_max = 0.0
         self._used_staleness_sum = 0.0
         self._used_staleness_n = 0
@@ -111,20 +112,30 @@ class GossipBus:
         Digests older than ``staleness_bound_s`` are dropped here, at read
         time — dropping at publish time would not catch a peer that simply
         went quiet.  The staleness of every digest actually consumed is
-        recorded so telemetry can prove the bound was honored."""
+        recorded so telemetry can prove the bound was honored.
+
+        A digest that ages past the bound is *pruned* on the view that first
+        drops it: a departed host costs one ``stale_drops`` count total, not
+        one per view forever, and the merge scan stays O(live hosts).  A
+        pruned host that comes back simply publishes a fresh digest."""
         bound = self.staleness_bound_s
         peer_depth, used, dropped = 0, 0.0, 0
         contributing = 1
+        dead = []
         for hid, dig in self._digests.items():
             if hid == host_id:
                 continue                     # own queue is read live
             age = now - dig.published_at
             if age > bound:
                 dropped += 1
+                dead.append(hid)
                 continue
             peer_depth += dig.queue_depth
             contributing += 1
             used = max(used, age)
+        for hid in dead:
+            del self._digests[hid]
+        self.pruned_digests += len(dead)
         self.views += 1
         self.stale_drops += dropped
         self._used_staleness_max = max(self._used_staleness_max, used)
@@ -145,6 +156,7 @@ class GossipBus:
             "publishes": self.publishes,
             "views": self.views,
             "stale_drops": self.stale_drops,
+            "pruned_digests": self.pruned_digests,
             "used_staleness_max_s": self._used_staleness_max,
             "used_staleness_mean_s": (self._used_staleness_sum / n) if n
                                      else 0.0,

@@ -100,7 +100,8 @@ def serve_crypto_online(*, duration_s=0.05, rate_hz=2048, n_c=8,
                         controller=False, holdback_lambda=0.0,
                         inflight_depth=1, compilation_cache_dir=None,
                         telemetry_out=None, trace_out=None,
-                        realtime=False, coscheduler=None):
+                        realtime=False, coscheduler=None,
+                        arrival_batch=None, columnar_admission=True):
     """Closed loop over the online runtime: load generator → admission →
     continuous batcher → co-scheduled dispatch → per-tenant results.
     ``trace_out`` switches request-lifecycle tracing on and writes the run's
@@ -123,13 +124,14 @@ def serve_crypto_online(*, duration_s=0.05, rate_hz=2048, n_c=8,
                       holdback_lambda=holdback_lambda,
                       inflight_depth=inflight_depth,
                       compilation_cache_dir=compilation_cache_dir,
+                      columnar_admission=columnar_admission,
                       tracing=trace_out is not None)
     server = CryptoServer(cfg, coscheduler=coscheduler)
     gen = LoadGenerator(PoissonTrace(rate_hz=rate_hz, duration_s=duration_s,
                                      uniform_degree=d_uniform, seed=seed),
                         seed=seed, accum=accum)
     t0 = time.time()
-    load = gen.run(server, realtime=realtime)
+    load = gen.run(server, realtime=realtime, arrival_batch=arrival_batch)
     dt = time.time() - t0
     snap = (server.telemetry.write_json(telemetry_out) if telemetry_out
             else server.telemetry.snapshot())
@@ -152,7 +154,8 @@ def serve_crypto_cluster(*, hosts=2, duration_s=0.05, rate_hz=2048, n_c=8,
                          holdback_lambda=0.0, inflight_depth=1,
                          compilation_cache_dir=None,
                          telemetry_out=None, trace=None, trace_out=None,
-                         realtime=False, coscheduler_factory=None):
+                         realtime=False, coscheduler_factory=None,
+                         arrival_batch=None, columnar_admission=True):
     """Closed loop over an N-host sharded cluster: tenant-hash ingress →
     per-host admission (gossip-informed SLO gate) → per-host continuous
     batcher → co-scheduled dispatch → two-phase drain barrier → merged
@@ -174,6 +177,7 @@ def serve_crypto_cluster(*, hosts=2, duration_s=0.05, rate_hz=2048, n_c=8,
         controller=controller, holdback_lambda=holdback_lambda,
         inflight_depth=inflight_depth,
         compilation_cache_dir=compilation_cache_dir,
+        columnar_admission=columnar_admission,
         tracing=trace_out is not None)
     cluster = ClusterServer(
         ClusterConfig(n_hosts=hosts, gossip_period_s=gossip_period_s,
@@ -186,7 +190,7 @@ def serve_crypto_cluster(*, hosts=2, duration_s=0.05, rate_hz=2048, n_c=8,
                      uniform_degree=d_uniform, seed=seed),
         seed=seed, accum=accum)
     t0 = time.time()
-    load = gen.run(cluster, realtime=realtime)
+    load = gen.run(cluster, realtime=realtime, arrival_batch=arrival_batch)
     dt = time.time() - t0
     snap = (cluster.write_json(telemetry_out) if telemetry_out
             else cluster.snapshot())
@@ -258,6 +262,14 @@ def main():
     ap.add_argument("--compilation-cache-dir", default=None,
                     help="persist compiled programs here across process "
                          "restarts (JAX compilation cache)")
+    ap.add_argument("--arrival-batch", type=int, default=None,
+                    help="feed the trace through the vectorised submit_many "
+                         "ingress edge in chunks of this many arrivals "
+                         "(virtual clock only)")
+    ap.add_argument("--scalar-admission", action="store_true",
+                    help="per-tenant TokenBucket dict instead of the "
+                         "columnar (structured-array) admission state — the "
+                         "bit-identical oracle path")
     args = ap.parse_args()
 
     reduction_by_workload = None
@@ -292,7 +304,8 @@ def main():
             inflight_depth=args.inflight_depth,
             compilation_cache_dir=args.compilation_cache_dir,
             telemetry_out=args.telemetry_out, trace_out=args.trace_out,
-            realtime=args.realtime)
+            realtime=args.realtime, arrival_batch=args.arrival_batch,
+            columnar_admission=not args.scalar_admission)
         m = snap["merged"]
         served = sum(1 for h in load.handles if h.done() and not h.rejected)
         print(f"cluster[{args.hosts} hosts]: served {served}/"
@@ -347,7 +360,8 @@ def main():
             inflight_depth=args.inflight_depth,
             compilation_cache_dir=args.compilation_cache_dir,
             telemetry_out=args.telemetry_out, trace_out=args.trace_out,
-            realtime=args.realtime)
+            realtime=args.realtime, arrival_batch=args.arrival_batch,
+            columnar_admission=not args.scalar_admission)
         lat = snap["latency"]
         print(f"online: served {load.n_served}/{len(load.handles)} requests "
               f"({len(load.rejected)} rejected) in {dt:.2f}s wall, "

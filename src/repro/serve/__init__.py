@@ -25,6 +25,7 @@ with its own compiled programs and HLO validation mode (eager V1–V5; lazy
 adds the one-fold-per-window checks V6/V7).
 """
 from repro.serve.admission import (AdmissionController, AdmissionDecision,
+                                   BatchDecisions, TenantInterner,
                                    TokenBucket)
 from repro.serve.batcher import ContinuousBatcher, ClosedBatch
 from repro.serve.client import LoadGenerator, LoadResult, attach_payloads

@@ -27,6 +27,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import validator as V
 from repro.core.scheduler.coscheduler import (SliceCoScheduler,
@@ -109,6 +110,11 @@ class ServeConfig:
     tenant_rate_hz: float | None = None
     tenant_burst: float = 8.0
     slo_deadline_s: float | None = None
+    # columnar_admission — tenant bucket state as one numpy structured array
+    # behind a dense-index interner, enabling the vectorised submit_many
+    # batch edge.  Decisions are bit-identical to the scalar per-tenant
+    # TokenBucket dict (False), which stays as the property-tested oracle.
+    columnar_admission: bool = True
     # dispatch
     accum: str = "fp32_mantissa"
     validate: bool = True
@@ -288,7 +294,8 @@ class CryptoServer:
             controller=self.controller, tracer=self.tracer)
         self.admission = AdmissionController(
             max_pending=cfg.max_pending, tenant_rate_hz=cfg.tenant_rate_hz,
-            tenant_burst=cfg.tenant_burst, slo_deadline_s=cfg.slo_deadline_s)
+            tenant_burst=cfg.tenant_burst, slo_deadline_s=cfg.slo_deadline_s,
+            columnar=cfg.columnar_admission)
         self.telemetry = telemetry or Telemetry(
             sketch_bound=cfg.latency_sketch_bound)
         if self.controller is not None:
@@ -312,7 +319,7 @@ class CryptoServer:
         # launch log, launch_s)
         self._rings: dict = collections.OrderedDict()
         self._launch_seq = 0
-        # class key -> (ClosedBatch, release_at, held_at)
+        # class key -> (ClosedBatch, release_at, held_at, hid)
         self._held: dict[tuple, tuple] = {}
         # Pending handles keyed by request identity: O(1) resolve, pruned on
         # completion (a long-lived server must not accumulate history), and
@@ -355,7 +362,7 @@ class CryptoServer:
                 if (self.cluster_depth_fn is not None
                     and self.admission.slo_deadline_s is not None) else None)
             decision = self.admission.admit(req, now,
-                                            pending=self.batcher.depth,
+                                            pending=self.pending_load,
                                             cluster_pending=cluster_pending)
         self.telemetry.record_admission(decision.reason)
         tr = self.tracer
@@ -384,10 +391,118 @@ class CryptoServer:
         self._dispatch(self.batcher.add(req, now), now)
         return handle
 
+    def submit_many(self, reqs, now: float | None = None,
+                    nows=None) -> list[ResponseHandle]:
+        """Batch ingress: admit one arrival batch through the vectorised
+        admission path, then stack every admitted row and advance the
+        dispatch pipeline once for the whole batch.
+
+        ``nows`` gives per-request clocks (arrival order, e.g. trace
+        timestamps); ``now`` (or the wall clock) stamps the whole batch when
+        absent.  Decisions equal the scalar per-request ``submit`` loop at
+        the same batch edge bit for bit, with two deliberate batch-edge
+        semantics: the gossiped cluster depth is sampled once per batch, and
+        a request object repeated *within* one batch is rejected as a
+        duplicate regardless of the first occurrence's decision (across
+        batches, resubmitting a rejected request stays allowed, as with
+        ``submit``).  Closed batches dispatch together at the batch's last
+        clock — age/occupancy grouping may differ from per-request
+        submission, but row semantics keep per-tenant results bit-identical
+        regardless of grouping."""
+        if nows is None:
+            t = time.monotonic() if now is None else now
+            nows_arr = np.full(len(reqs), float(t))
+        else:
+            nows_arr = np.asarray(nows, np.float64)
+            if len(nows_arr) != len(reqs):
+                raise ValueError(f"nows has {len(nows_arr)} entries for "
+                                 f"{len(reqs)} requests")
+        handles = [ResponseHandle(r, submitted_at=float(t))
+                   for r, t in zip(reqs, nows_arr)]
+        if not handles:
+            return handles
+        tr = self.tracer
+        if self._draining:
+            d = AdmissionDecision(False, "draining")
+            for h, t in zip(handles, nows_arr):
+                h._reject(d, at=float(t))
+            self.telemetry.record_admissions({"draining": len(reqs)})
+            return handles
+        live_pos, dup_pos, seen = [], [], set()
+        for p, r in enumerate(reqs):
+            rid = id(r)
+            if rid in self._handles or rid in seen:
+                dup_pos.append(p)
+            else:
+                seen.add(rid)
+                live_pos.append(p)
+        if dup_pos:
+            d = AdmissionDecision(False, "duplicate")
+            for p in dup_pos:
+                handles[p]._reject(d, at=float(nows_arr[p]))
+                if tr is not None:
+                    tr.instant("reject", float(nows_arr[p]),
+                               args={"workload": reqs[p].workload,
+                                     "reason": "duplicate"})
+        if not live_pos:
+            self.telemetry.record_admissions({"duplicate": len(dup_pos)})
+            return handles
+        cluster_pending = (
+            self.cluster_depth_fn(float(nows_arr[live_pos[0]]))
+            if (self.cluster_depth_fn is not None
+                and self.admission.slo_deadline_s is not None) else None)
+        dec = self.admission.admit_batch(
+            np.asarray([reqs[p].tenant_id for p in live_pos]),
+            nows_arr[live_pos], pending=self.pending_load,
+            cluster_pending=cluster_pending)
+        counts = dec.counts()
+        if dup_pos:
+            counts["duplicate"] = len(dup_pos)
+        self.telemetry.record_admissions(counts)
+        closed: list[ClosedBatch] = []
+        admitted = dec.admitted
+        for j, p in enumerate(live_pos):
+            req, t = reqs[p], float(nows_arr[p])
+            if not admitted[j]:
+                d = dec.decision(j)
+                if tr is not None:
+                    tr.instant("reject", t, args={"workload": req.workload,
+                                                  "reason": d.reason})
+                handles[p]._reject(d, at=t)
+                continue
+            if tr is not None:
+                rid = tr.next_id()
+                req.trace_id = rid
+                name = self._req_span_names.get(req.workload)
+                if name is None:
+                    name = self._req_span_names.setdefault(
+                        req.workload, "req:" + req.workload)
+                tr.begin("request", rid, name, t)
+            self._handles[id(req)] = handles[p]
+            closed.extend(self.batcher.add(req, t))
+        self._dispatch(closed, float(nows_arr[-1]))
+        return handles
+
+    @property
+    def pending_load(self) -> int:
+        """Rows occupying the slice that a new admission must queue behind:
+        the batcher's open depth, rows parked in the holdback pen, and rows
+        launched but not yet gathered on the async ring.  This is what the
+        queue/SLO gates price waits from — ``batcher.depth`` alone is blind
+        to held and in-flight rows, so λ-aggressive/async configs would
+        admit load the slice cannot carry."""
+        load = self.batcher.depth
+        if self._held:
+            load += sum(cb.batch.n_c for cb, _, _, _ in self._held.values())
+        for ring in self._rings.values():
+            for _, part, _, _, _ in ring:
+                load += sum(cb.batch.n_c for cb in part)
+        return load
+
     @property
     def under_backpressure(self) -> bool:
         """Soft signal for clients to slow down before rejections start."""
-        return self.admission.backpressure(self.batcher.depth)
+        return self.admission.backpressure(self.pending_load)
 
     # --- clock-driven flushing ------------------------------------------------
 

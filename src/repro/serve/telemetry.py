@@ -227,6 +227,14 @@ class Telemetry:
     def record_admission(self, reason: str):
         self.admission_counts[reason] = self.admission_counts.get(reason, 0) + 1
 
+    def record_admissions(self, counts: dict):
+        """Bulk admission decisions (one arrival batch): same ledger as
+        :meth:`record_admission`, one update per reason per batch instead of
+        one per request — the batch ingress edge's O(1) telemetry cost."""
+        for reason, k in counts.items():
+            self.admission_counts[reason] = (
+                self.admission_counts.get(reason, 0) + int(k))
+
     def record_holdback(self, event: str, *, rows: int = 0,
                         hold_s: float = 0.0):
         """``held`` when a batch enters holdback; ``wins``/``losses``/

@@ -96,6 +96,30 @@ def test_gossip_period_gating_and_staleness_bound():
     assert snap["used_staleness_max_s"] <= snap["staleness_bound_s"]
 
 
+def test_gossip_dead_host_pruned_after_one_drop():
+    """A host that stops publishing costs exactly one stale drop, ever: the
+    first view that ages its digest past the bound also prunes it, so later
+    views neither consume nor re-drop it.  Republishing revives the host."""
+    g = GossipBus(3, period_s=0.01, staleness_factor=2.0)
+    g.publish(1, 5, now=0.0)
+    g.publish(2, 7, now=0.0)
+    v = g.cluster_view(0, local_depth=0, now=0.01)
+    assert v.peer_depth == 12 and v.stale_dropped == 0
+    # host 1 dies; host 2 keeps publishing; views every period for 1 s
+    for i in range(2, 102):
+        now = 0.01 * i
+        g.maybe_publish(2, 7, now=now)
+        v = g.cluster_view(0, local_depth=0, now=now)
+    assert v.peer_depth == 7 and v.contributing_hosts == 2
+    snap = g.snapshot()
+    assert snap["stale_drops"] == 1          # pre-fix: one drop per view
+    assert snap["pruned_digests"] == 1
+    # a pruned host that publishes again is simply fresh
+    g.publish(1, 3, now=1.02)
+    v = g.cluster_view(0, local_depth=0, now=1.025)
+    assert v.peer_depth == 10 and v.stale_dropped == 0
+
+
 def test_gossip_gated_admission_rejects_on_cluster_depth():
     """Acceptance: the SLO gate rejects on cluster-wide depth that
     local-only state would admit, and never consumes a digest older than
