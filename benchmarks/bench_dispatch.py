@@ -57,6 +57,7 @@ DRIFT_RATES = (512, 4096, 1024, 8192)
 DRIFT_SEG_S = 0.05
 ADAPTIVE_FLOOR = 1.2     # acceptance: adaptive ≥ 1.2× static rows/s
 TRACE_OVERHEAD_MAX = 0.05   # acceptance: tracing costs ≤ 5% rows/s vs off
+METRICS_OVERHEAD_MAX = 0.05  # acceptance: metrics scrape ≤ 5% rows/s vs off
 
 
 def make_batches(n_batches: int, *, seed: int = 0, d_buckets=(64, 128),
@@ -377,6 +378,81 @@ def tracing_overhead(repeats: int = 8, seed: int = 0, rate_hz: float = 4096,
             "points": points}
 
 
+def metrics_overhead(repeats: int = 8, seed: int = 0, rate_hz: float = 4096,
+                     duration_s: float = 0.2, d_uniform: int = 256,
+                     metrics_out=None) -> dict:
+    """The continuous-metrics axis: the same fixed-rate serving loop as
+    :func:`tracing_overhead`, once with the metrics scrape + alert engine
+    off and once on (default 5 ms cadence).  The on run's exposition must
+    validate as OpenMetrics; full runs additionally assert rows/s lags the
+    off run by at most ``METRICS_OVERHEAD_MAX`` (dry runs skip the timing
+    claim — CI wall clocks are noise)."""
+    from repro.core.scheduler import PoissonTrace
+    from repro.core.scheduler.coscheduler import (SliceCoScheduler,
+                                                  default_row_ladder)
+    from repro.core.scheduler.rectangular import select_bucket
+    from repro.obs import validate_openmetrics
+    from repro.serve import CryptoServer, LoadGenerator, ServeConfig
+
+    cos = SliceCoScheduler(merge=True,
+                           row_ladder=default_row_ladder(LADDER[-1]))
+    cos.precompile([("dilithium", select_bucket(d_uniform))], N_C)
+    base = dict(n_c=N_C, max_age_s=0.002, validate=False,
+                merge_dispatch=True, row_ladder_max=LADDER[-1],
+                async_pipeline=True)
+
+    import gc
+
+    def one(metrics: bool):
+        srv = CryptoServer(ServeConfig(**base, metrics=metrics),
+                           coscheduler=cos)
+        gen = LoadGenerator(
+            PoissonTrace(rate_hz=rate_hz, duration_s=duration_s,
+                         uniform_degree=d_uniform, seed=seed,
+                         mixture=(("dilithium", 1.0),)),
+            seed=seed)
+        gc.collect()
+        gc.disable()
+        try:
+            t0 = time.perf_counter()
+            load = gen.run(srv)
+            dt = time.perf_counter() - t0
+        finally:
+            gc.enable()
+        assert not load.rejected, "overhead axis must serve everything"
+        return load.n_served, dt, srv
+
+    one(False)
+    one(True)                        # warm both paths off the clock
+    rows_off = rows_on = scraped = None
+    off_s = on_s = float("inf")
+    for _ in range(repeats):
+        served, dt, _ = one(False)
+        if dt < off_s:
+            rows_off, off_s = served, dt
+        served, dt, srv = one(True)
+        if dt < on_s:
+            rows_on, on_s, scraped = served, dt, srv
+    assert rows_on == rows_off, (rows_on, rows_off)
+    stats = validate_openmetrics(scraped.metrics_text())
+    assert scraped.metrics.scrapes > 0, "metrics run never scraped"
+    if metrics_out:
+        scraped.write_metrics(metrics_out)
+    overhead = on_s / off_s - 1.0
+    points = [
+        {"config": "metrics-off", "axis": "metrics-overhead",
+         "rows": rows_off, "wall_s": off_s, "rows_per_s": rows_off / off_s},
+        {"config": "metrics-on", "axis": "metrics-overhead",
+         "rows": rows_on, "wall_s": on_s, "rows_per_s": rows_on / on_s,
+         "overhead_vs_off": overhead, "scrapes": scraped.metrics.scrapes,
+         "metrics_series": stats["series"],
+         "alert_events": scraped.alerts.events_total},
+    ]
+    return {"rate_hz": rate_hz, "duration_s": duration_s,
+            "overhead_vs_off": overhead, "metrics_stats": stats,
+            "points": points}
+
+
 def dry_run(controller: bool = False) -> dict:
     """CI smoke: tiny stream, parity + retrace-guard asserts, no timing
     claims (CI wall clocks are noise)."""
@@ -388,6 +464,9 @@ def dry_run(controller: bool = False) -> dict:
     tdoc = tracing_overhead(repeats=1, rate_hz=1024, duration_s=0.01)
     doc["tracing_dry"] = {"trace_stats": tdoc["trace_stats"],
                           "overhead_vs_off": tdoc["overhead_vs_off"]}
+    mdoc = metrics_overhead(repeats=1, rate_hz=1024, duration_s=0.01)
+    doc["metrics_dry"] = {"metrics_stats": mdoc["metrics_stats"],
+                          "overhead_vs_off": mdoc["overhead_vs_off"]}
     if controller:
         cdoc = controller_ladder(rates=(256, 2048), seg_duration_s=0.02,
                                  repeats=1)
@@ -415,6 +494,13 @@ def main():
     ap.add_argument("--trace-out", default=None,
                     help="write the traced run's Perfetto JSON here "
                          "(with --tracing)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="also run the continuous-metrics axis: rows/s with "
+                         "the metrics scrape + alert engine on vs off "
+                         "(≤ 5% acceptance)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the scraped run's OpenMetrics exposition "
+                         "here (with --metrics)")
     ap.add_argument("--out", default="BENCH_dispatch.json")
     ap.add_argument("--dry-run", action="store_true",
                     help="tiny stream + parity/retrace asserts (CI)")
@@ -432,6 +518,11 @@ def main():
         print(f"tracing dry ok: {ts['requests']} requests traced through "
               f"{ts['batches']} batches / {ts['launches']} launches, "
               f"trace schema-valid (overhead untracked in dry runs)")
+        ms = doc["metrics_dry"]["metrics_stats"]
+        print(f"metrics dry ok: {ms['families']} families / "
+              f"{ms['series']} series / {ms['samples']} samples, "
+              f"exposition OpenMetrics-valid (overhead untracked in "
+              f"dry runs)")
         if args.controller:
             adapt = next(p for p in doc["controller_dry"]["points"]
                          if p["config"] == "drift-adaptive")
@@ -452,6 +543,12 @@ def main():
                                 trace_out=args.trace_out)
         doc["points"].extend(tdoc["points"])
         doc["tracing_overhead"] = {k: v for k, v in tdoc.items()
+                                   if k != "points"}
+    if args.metrics:
+        mdoc = metrics_overhead(repeats=args.repeats, seed=args.seed,
+                                metrics_out=args.metrics_out)
+        doc["points"].extend(mdoc["points"])
+        doc["metrics_overhead"] = {k: v for k, v in mdoc.items()
                                    if k != "points"}
     record = write_perf_record(
         args.out, "dispatch",
@@ -484,6 +581,14 @@ def main():
             raise AssertionError(
                 f"tracing overhead {over:+.1%} exceeds the "
                 f"{TRACE_OVERHEAD_MAX:.0%} acceptance ceiling")
+    if args.metrics:
+        over = doc["metrics_overhead"]["overhead_vs_off"]
+        print(f"metrics overhead vs off: {over:+.1%} "
+              f"(acceptance ceiling {METRICS_OVERHEAD_MAX:.0%})")
+        if over > METRICS_OVERHEAD_MAX:
+            raise AssertionError(
+                f"metrics overhead {over:+.1%} exceeds the "
+                f"{METRICS_OVERHEAD_MAX:.0%} acceptance ceiling")
     print(json.dumps(record["env"], sort_keys=True))
 
 

@@ -35,7 +35,7 @@ def sweep(rates=(512, 1024, 2048), *, duration_s=0.02, n_c=8,
           row_ladder_max=None, donate=False,
           async_pipeline=False, controller=False, holdback_lambda=0.0,
           inflight_depth=1, coscheduler=None,
-          trace_out=None) -> list[dict]:
+          trace_out=None, metrics_out=None) -> list[dict]:
     from repro.launch.serve import serve_crypto_online
 
     points = []
@@ -48,9 +48,11 @@ def sweep(rates=(512, 1024, 2048), *, duration_s=0.02, n_c=8,
             donate=donate, async_pipeline=async_pipeline,
             controller=controller, holdback_lambda=holdback_lambda,
             inflight_depth=inflight_depth, coscheduler=coscheduler,
-            # one representative traced run per sweep — tracing every rate
-            # would make the trace file a concatenation of unrelated runs
+            # one representative traced/scraped run per sweep — tracing
+            # every rate would make the output a concatenation of
+            # unrelated runs
             trace_out=trace_out if rate == rates[0] else None,
+            metrics_out=metrics_out if rate == rates[0] else None,
             validate=False)      # HLO validation is tested elsewhere; this
                                  # sweep measures the serving path itself
         lat = snap["latency"]
@@ -193,18 +195,20 @@ def _make_warm_coscheduler(*, n_c, merge_dispatch, row_ladder_max, donate,
     return coscheduler_from_config(cfg)
 
 
-def dry_run(trace_out=None) -> dict:
-    """CI smoke: one tiny traced sweep point; asserts the trace file is
-    schema-valid with a full submit → batch → launch → complete chain per
-    admitted request, and that penalty shares conserve."""
+def dry_run(trace_out=None, metrics_out=None) -> dict:
+    """CI smoke: one tiny traced + scraped sweep point; asserts the trace
+    file is schema-valid with a full submit → batch → launch → complete
+    chain per admitted request, that the OpenMetrics exposition validates,
+    and that penalty shares conserve."""
     import tempfile
 
-    from repro.obs import validate_chrome_trace
+    from repro.obs import validate_chrome_trace, validate_openmetrics
 
-    path = trace_out or os.path.join(tempfile.mkdtemp(prefix="bench_serve_"),
-                                     "trace.json")
+    tmp = tempfile.mkdtemp(prefix="bench_serve_")
+    path = trace_out or os.path.join(tmp, "trace.json")
+    mpath = metrics_out or os.path.join(tmp, "metrics.om")
     points = sweep(rates=(512,), duration_s=0.005, max_age_s=0.002,
-                   trace_out=path)
+                   trace_out=path, metrics_out=mpath)
     pt = points[0]
     assert pt["served"] > 0 and pt["rejected"] == 0, pt
     with open(path) as f:
@@ -212,11 +216,14 @@ def dry_run(trace_out=None) -> dict:
     stats = validate_chrome_trace(trace)
     assert stats["requests"] == pt["served"], (stats, pt["served"])
     assert stats["batches"] > 0 and stats["launches"] > 0, stats
+    mstats = validate_openmetrics(mpath)
+    assert mstats["samples"] > 0, mstats
     assert pt["penalty"], pt
     for w, sec in pt["penalty"].items():
         total = sum(sec["shares"].values())
         assert abs(total - 1.0) <= 1e-9, (w, sec["shares"])
-    return {"points": points, "trace_path": path, "trace_stats": stats}
+    return {"points": points, "trace_path": path, "trace_stats": stats,
+            "metrics_path": mpath, "metrics_stats": mstats}
 
 
 def run(fast: bool = True):
@@ -254,6 +261,9 @@ def main():
     ap.add_argument("--trace-out", default=None,
                     help="record request-lifecycle tracing on one sweep "
                          "point and write the Perfetto JSON here")
+    ap.add_argument("--metrics-out", default=None,
+                    help="scrape continuous metrics on one sweep point and "
+                         "write the OpenMetrics exposition here")
     ap.add_argument("--tenant-frontier", action="store_true",
                     help="measure the admitted-requests/s × tenant-count "
                          "frontier of the columnar admission edge instead "
@@ -299,12 +309,16 @@ def main():
         return
 
     if args.dry_run:
-        doc = dry_run(trace_out=args.trace_out)
+        doc = dry_run(trace_out=args.trace_out, metrics_out=args.metrics_out)
         stats = doc["trace_stats"]
+        ms = doc["metrics_stats"]
         print(f"dry run ok: {stats['requests']} requests traced through "
               f"{stats['batches']} batches / {stats['launches']} launches "
-              f"({stats['events']} events, schema-valid); penalty shares "
-              f"conserve — trace → {doc['trace_path']}")
+              f"({stats['events']} events, schema-valid); metrics "
+              f"{ms['families']} families / {ms['series']} series / "
+              f"{ms['samples']} samples (OpenMetrics-valid); penalty "
+              f"shares conserve — trace → {doc['trace_path']}, "
+              f"metrics → {doc['metrics_path']}")
         return
 
     shared = _make_warm_coscheduler(
@@ -325,7 +339,8 @@ def main():
     # every merged-dispatch program class the recorded sweep launches is
     # already compiled and rows_per_s measures serving, not XLA
     sweep(rates, **kw)
-    points = sweep(rates, trace_out=args.trace_out, **kw)
+    points = sweep(rates, trace_out=args.trace_out,
+                   metrics_out=args.metrics_out, **kw)
     doc = perf_record("serve", points)
     text = json.dumps(doc, indent=2, sort_keys=True)
     if args.out:

@@ -37,6 +37,15 @@ ART = os.path.join(REPO, "artifacts", "dryrun")
 # env keys that must all match for cross-record timing deltas to be signal
 ENV_KEYS = ("backend", "device_count", "jax", "platform", "python")
 
+# penalty-ledger share bins watched for drift between records; an absolute
+# move past PENALTY_DRIFT_PP on any bin is printed as a warning (never a
+# failure — shares are modeled attribution, not a timing claim, but a silent
+# 5-point swing in where the cycles go is exactly the regression the ledger
+# exists to surface)
+PENALTY_BINS = ("mxu_productive", "arithmetic_stall", "spatial_pad",
+                "host_gap")
+PENALTY_DRIFT_PP = 0.05
+
 
 # --- BENCH_* record diffing ---------------------------------------------------
 
@@ -81,6 +90,27 @@ def env_mismatch(base: dict, cand: dict) -> dict:
     return out
 
 
+def penalty_drift(bp: dict, cp: dict) -> list[dict]:
+    """Per-workload penalty-share moves past ``PENALTY_DRIFT_PP`` between
+    two points that both carry a ``penalty`` section (absent on either side
+    → nothing to compare, no drift)."""
+    out = []
+    base_pen, cand_pen = bp.get("penalty"), cp.get("penalty")
+    if not base_pen or not cand_pen:
+        return out
+    for workload in sorted(base_pen.keys() & cand_pen.keys()):
+        bs = base_pen[workload].get("shares", {})
+        cs = cand_pen[workload].get("shares", {})
+        for bin_name in PENALTY_BINS:
+            b, c = bs.get(bin_name), cs.get(bin_name)
+            if b is None or c is None:
+                continue
+            if abs(c - b) > PENALTY_DRIFT_PP:
+                out.append({"workload": workload, "bin": bin_name,
+                            "base": b, "cand": c, "drift": c - b})
+    return out
+
+
 def diff_records(base: dict, cand: dict, threshold: float = 0.2) -> dict:
     """Per-config rows/s deltas + the regression verdict.
 
@@ -106,6 +136,9 @@ def diff_records(base: dict, cand: dict, threshold: float = 0.2) -> dict:
         row = {"config": config, "status": "ok",
                "base_rows_per_s": bp["rows_per_s"],
                "cand_rows_per_s": cp["rows_per_s"], "delta": delta}
+        drift = penalty_drift(bp, cp)
+        if drift:
+            row["penalty_drift"] = drift
         if delta < -threshold:
             row["status"] = "regression"
             regressions.append(row)
@@ -136,6 +169,12 @@ def print_diff(report: dict):
             print(f"  {row['config']:<28} {row['base_rows_per_s']:10.0f} → "
                   f"{row['cand_rows_per_s']:10.0f} rows/s "
                   f"({row['delta']:+.1%}){marker}")
+            for d in row.get("penalty_drift", ()):
+                # warning only — share drift never affects the exit status
+                print(f"    WARNING penalty drift {d['workload']}/"
+                      f"{d['bin']}: {d['base']:.1%} → {d['cand']:.1%} "
+                      f"({d['drift']:+.1%}, past the "
+                      f"{PENALTY_DRIFT_PP:.0%} watch band)")
 
 
 def run_bench_diff(args) -> int:

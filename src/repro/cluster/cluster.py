@@ -38,7 +38,9 @@ import dataclasses
 import json
 import time
 
-from repro.obs.export import write_chrome_trace
+from repro.obs.alerts import AlertEngine, default_cluster_rules
+from repro.obs.export import write_chrome_trace, write_text
+from repro.obs.metrics import MetricsRegistry, expose_registries
 from repro.obs.tracing import Tracer
 from repro.serve.server import (CryptoServer, ServeConfig,
                                 coscheduler_from_config)
@@ -89,12 +91,35 @@ class ClusterServer:
                 # wins — so traced clusters should use per-host
                 # co-schedulers, the default construction.)
                 srv.tracer.host = h
+            if srv.metrics is not None and srv.metrics.host is None:
+                # Same backfill for the metrics registry: the host label is
+                # what keeps per-host series distinguishable (and the fleet
+                # exposition parseable) after the registries merge.
+                srv.metrics.host = h
+                srv.alerts.host = h
             self.hosts.append(srv)
         self._submissions = [0] * cfg.n_hosts
         self._barrier: dict | None = None
         # Cluster-control tracer (host=None → its own Perfetto process):
         # carries the drain-barrier span over the fleet timeline.
         self.tracer = Tracer(host=None) if cfg.serve.tracing else None
+        # Fleet-level metrics + alerting: per-host registries come with the
+        # shared serve config; this registry (host=None, like the control
+        # tracer) holds the gossip-side series — publish/view audit, per-host
+        # publish silence — and its engine runs the dead-host sensing rules.
+        self.metrics = None
+        self.alerts = None
+        if cfg.serve.metrics:
+            self.metrics = MetricsRegistry(
+                period_s=cfg.serve.metrics_period_s,
+                capacity=cfg.serve.metrics_capacity, host=None)
+            self._describe_metrics()
+            self.metrics.add_collector(self._metrics_samples)
+            self.alerts = AlertEngine(
+                self.metrics,
+                default_cluster_rules(
+                    staleness_bound_s=self.gossip.staleness_bound_s),
+                tracer=self.tracer, host=None)
 
     # --- gossip wiring --------------------------------------------------------
 
@@ -109,10 +134,68 @@ class ClusterServer:
         return depth_fn
 
     def _tick(self, now: float):
-        """Run every due gossip publish (period-gated per host)."""
+        """Run every due gossip publish (period-gated per host), then the
+        fleet-level metrics scrape + dead-host sensing on the same edge."""
         for h, srv in enumerate(self.hosts):
             self.gossip.maybe_publish(h, srv.pending_load, now,
                                       open_batches=srv.batcher.open_batches)
+        if self.metrics is not None and self.metrics.maybe_scrape(now):
+            self.alerts.evaluate(now)
+
+    # --- fleet metrics --------------------------------------------------------
+
+    def _describe_metrics(self):
+        m = self.metrics
+        m.describe("repro_gossip_publishes_total", "counter",
+                   "Digest publishes across the fleet.")
+        m.describe("repro_gossip_views_total", "counter",
+                   "Bounded-staleness view merges.")
+        m.describe("repro_gossip_stale_drops_total", "counter",
+                   "Digests dropped at read time for exceeding the bound.")
+        m.describe("repro_gossip_silence_seconds", "gauge",
+                   "Per-host publish silence (dead-host sensing signal).")
+        m.describe("repro_gossip_silence_seconds_max", "gauge",
+                   "Worst publish silence across the fleet.")
+        m.describe("repro_gossip_used_staleness_seconds_max", "gauge",
+                   "Oldest digest any decision actually consumed.")
+        m.describe("repro_cluster_queue_rows", "gauge",
+                   "Fleet pending load (sum of per-host pending_load).")
+
+    def _metrics_samples(self, now: float):
+        bus = self.gossip
+        out = [
+            ("repro_gossip_publishes_total", (), bus.publishes),
+            ("repro_gossip_views_total", (), bus.views),
+            ("repro_gossip_stale_drops_total", (), bus.stale_drops),
+            ("repro_gossip_used_staleness_seconds_max", (),
+             bus._used_staleness_max),
+            ("repro_cluster_queue_rows", (),
+             sum(srv.pending_load for srv in self.hosts)),
+        ]
+        silence = bus.silence_s(now)
+        if silence:
+            for hid, age in silence.items():
+                out.append(("repro_gossip_silence_seconds",
+                            (("peer", str(hid)),), age))
+            out.append(("repro_gossip_silence_seconds_max", (),
+                        max(silence.values())))
+        return out
+
+    def metrics_text(self) -> str:
+        """One OpenMetrics document for the fleet: per-host registries
+        (samples host-labelled) merged with the cluster-level registry."""
+        if self.metrics is None:
+            raise RuntimeError("metrics are off — set ServeConfig(metrics="
+                               "True) in the cluster config")
+        regs = [srv.metrics for srv in self.hosts if srv.metrics is not None]
+        regs.append(self.metrics)
+        return expose_registries(regs)
+
+    def write_metrics(self, path: str) -> str:
+        """Write the fleet exposition (gzip when path ends in .gz)."""
+        text = self.metrics_text()
+        write_text(path, text)
+        return text
 
     # --- the CryptoServer-shaped surface --------------------------------------
 
@@ -185,6 +268,11 @@ class ClusterServer:
         if self.tracer is not None:
             self.tracer.emit("E", "drain_barrier", now, track="cluster",
                              args={"batches_flushed": flushed})
+        # Terminal fleet scrape: the post-drain state (zero in-flight, final
+        # silence ages) is always sampled, mirroring each host's own drain
+        # scrape (a same-instant repeat is a no-op by ring monotonicity).
+        if self.metrics is not None and self.metrics.scrape(now):
+            self.alerts.evaluate(now)
         return flushed
 
     @property
@@ -207,7 +295,7 @@ class ClusterServer:
             for snap in host_snaps:
                 snap["latency"].pop("samples", None)
                 snap["queue_wait"].pop("samples", None)
-        return {
+        out = {
             "n_hosts": len(self.hosts),
             "merged": merged,
             "per_host": host_snaps,
@@ -218,6 +306,10 @@ class ClusterServer:
             },
             "drain_barrier": self._barrier,
         }
+        if self.metrics is not None:
+            out["cluster_metrics"] = self.metrics.snapshot()
+            out["cluster_alerts"] = self.alerts.snapshot()
+        return out
 
     def write_json(self, path: str, include_samples: bool = False) -> dict:
         snap = self.snapshot(include_samples=include_samples)

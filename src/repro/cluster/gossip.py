@@ -146,6 +146,15 @@ class GossipBus:
                            contributing_hosts=contributing,
                            stale_dropped=dropped, max_staleness_s=used)
 
+    def silence_s(self, now: float) -> dict[int, float]:
+        """Per-host publish silence: ``now - last publish`` for every host
+        that has ever published.  The dead-host sensing signal — a host
+        whose silence exceeds ``staleness_bound_s`` has no usable digest
+        anywhere in the fleet (the ROADMAP host-failure follow-on's
+        detection half; re-route/replay build on this)."""
+        return {hid: max(0.0, now - last)
+                for hid, last in self._last_pub.items()}
+
     # --- export ---------------------------------------------------------------
 
     def snapshot(self) -> dict:

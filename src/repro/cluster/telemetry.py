@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import math
 
+from repro.obs.alerts import merge_alert_sections
 from repro.obs.ledger import merge_penalty_sections
 from repro.serve.telemetry import LatencyHistogram
 
@@ -315,4 +316,26 @@ def merge_snapshots(snaps: list[dict]) -> dict:
     controller = _merge_controller(snaps)
     if controller is not None:
         merged["controller"] = controller
+    alerts = merge_alert_sections([s.get("alerts") for s in snaps])
+    if alerts:
+        merged["alerts"] = alerts
+    metrics = _merge_metrics_audit(snaps)
+    if metrics is not None:
+        merged["metrics"] = metrics
     return merged
+
+
+def _merge_metrics_audit(snaps: list[dict]) -> dict | None:
+    """Fleet sum of the per-host registry audits (None when no host scrapes
+    — hosts predating the section contribute nothing)."""
+    parts = [s.get("metrics") for s in snaps]
+    parts = [p for p in parts if p]
+    if not parts:
+        return None
+    return {
+        "hosts": len(parts),
+        "scrapes": sum(p.get("scrapes", 0) for p in parts),
+        "series": sum(p.get("series", 0) for p in parts),
+        "samples": sum(p.get("samples", 0) for p in parts),
+        "dropped_points": sum(p.get("dropped_points", 0) for p in parts),
+    }

@@ -100,14 +100,25 @@ def serve_crypto_online(*, duration_s=0.05, rate_hz=2048, n_c=8,
                         controller=False, holdback_lambda=0.0,
                         inflight_depth=1, compilation_cache_dir=None,
                         telemetry_out=None, trace_out=None,
+                        metrics_out=None, metrics_period_s=0.005,
+                        metrics_port=None, deterministic_timing=False,
                         realtime=False, coscheduler=None,
                         arrival_batch=None, columnar_admission=True):
     """Closed loop over the online runtime: load generator → admission →
     continuous batcher → co-scheduled dispatch → per-tenant results.
     ``trace_out`` switches request-lifecycle tracing on and writes the run's
-    Chrome-trace JSON there (open in ui.perfetto.dev)."""
+    Chrome-trace JSON there (open in ui.perfetto.dev); ``metrics_out``
+    switches the continuous metrics scrape + alert engine on and writes the
+    OpenMetrics exposition there (``.gz`` compresses either file);
+    ``metrics_port`` additionally serves ``/metrics`` over HTTP for the
+    run's duration (wall-clock ``realtime`` mode only — a virtual-clock run
+    finishes before any external scraper could connect)."""
     from repro.core.scheduler import PoissonTrace
     from repro.serve import CryptoServer, LoadGenerator, ServeConfig
+
+    if metrics_port is not None and not realtime:
+        raise ValueError("--metrics-port needs --realtime: the HTTP "
+                         "endpoint only makes sense on the wall clock")
 
     cfg = ServeConfig(n_c=n_c, max_age_s=max_age_s, validate=validate,
                       accum=accum, max_pending=max_pending,
@@ -125,18 +136,32 @@ def serve_crypto_online(*, duration_s=0.05, rate_hz=2048, n_c=8,
                       inflight_depth=inflight_depth,
                       compilation_cache_dir=compilation_cache_dir,
                       columnar_admission=columnar_admission,
-                      tracing=trace_out is not None)
+                      tracing=trace_out is not None,
+                      metrics=(metrics_out is not None
+                               or metrics_port is not None),
+                      metrics_period_s=metrics_period_s,
+                      deterministic_timing=deterministic_timing)
     server = CryptoServer(cfg, coscheduler=coscheduler)
     gen = LoadGenerator(PoissonTrace(rate_hz=rate_hz, duration_s=duration_s,
                                      uniform_degree=d_uniform, seed=seed),
                         seed=seed, accum=accum)
+    httpd = None
+    if metrics_port is not None:
+        from repro.obs.metrics import serve_metrics_http
+        httpd = serve_metrics_http([server.metrics], metrics_port)
     t0 = time.time()
-    load = gen.run(server, realtime=realtime, arrival_batch=arrival_batch)
+    try:
+        load = gen.run(server, realtime=realtime, arrival_batch=arrival_batch)
+    finally:
+        if httpd is not None:
+            httpd.shutdown()
     dt = time.time() - t0
     snap = (server.telemetry.write_json(telemetry_out) if telemetry_out
             else server.telemetry.snapshot())
     if trace_out:
         server.write_trace(trace_out)
+    if metrics_out:
+        server.write_metrics(metrics_out)
     return load, snap, dt
 
 
@@ -154,6 +179,8 @@ def serve_crypto_cluster(*, hosts=2, duration_s=0.05, rate_hz=2048, n_c=8,
                          holdback_lambda=0.0, inflight_depth=1,
                          compilation_cache_dir=None,
                          telemetry_out=None, trace=None, trace_out=None,
+                         metrics_out=None, metrics_period_s=0.005,
+                         deterministic_timing=False,
                          realtime=False, coscheduler_factory=None,
                          arrival_batch=None, columnar_admission=True):
     """Closed loop over an N-host sharded cluster: tenant-hash ingress →
@@ -178,7 +205,10 @@ def serve_crypto_cluster(*, hosts=2, duration_s=0.05, rate_hz=2048, n_c=8,
         inflight_depth=inflight_depth,
         compilation_cache_dir=compilation_cache_dir,
         columnar_admission=columnar_admission,
-        tracing=trace_out is not None)
+        tracing=trace_out is not None,
+        metrics=metrics_out is not None,
+        metrics_period_s=metrics_period_s,
+        deterministic_timing=deterministic_timing)
     cluster = ClusterServer(
         ClusterConfig(n_hosts=hosts, gossip_period_s=gossip_period_s,
                       gossip_staleness_factor=gossip_staleness_factor,
@@ -196,6 +226,8 @@ def serve_crypto_cluster(*, hosts=2, duration_s=0.05, rate_hz=2048, n_c=8,
             else cluster.snapshot())
     if trace_out:
         cluster.write_trace(trace_out)
+    if metrics_out:
+        cluster.write_metrics(metrics_out)
     return load, snap, dt
 
 
@@ -226,6 +258,20 @@ def main():
                     help="record request-lifecycle tracing and write the "
                          "Chrome-trace/Perfetto JSON here (crypto-online "
                          "and cluster modes; open in ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="scrape continuous metrics + run the alert engine "
+                         "and write the OpenMetrics exposition here "
+                         "(crypto-online and cluster modes; .gz compresses)")
+    ap.add_argument("--metrics-period-ms", type=float, default=5.0,
+                    help="serving-clock scrape cadence for --metrics-out")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="also serve GET /metrics on this localhost port for "
+                         "the run's duration (requires --realtime)")
+    ap.add_argument("--deterministic-timing", action="store_true",
+                    help="replace measured dispatch wall time with the "
+                         "modeled device-cycle time so latencies, EWMAs, "
+                         "metrics series, and alert logs are bit-identical "
+                         "across reruns of the same trace")
     ap.add_argument("--realtime", action="store_true",
                     help="pace submissions in wall time (default: virtual clock)")
     ap.add_argument("--accum", default="fp32_mantissa",
@@ -304,6 +350,9 @@ def main():
             inflight_depth=args.inflight_depth,
             compilation_cache_dir=args.compilation_cache_dir,
             telemetry_out=args.telemetry_out, trace_out=args.trace_out,
+            metrics_out=args.metrics_out,
+            metrics_period_s=args.metrics_period_ms / 1e3,
+            deterministic_timing=args.deterministic_timing,
             realtime=args.realtime, arrival_batch=args.arrival_batch,
             columnar_admission=not args.scalar_admission)
         m = snap["merged"]
@@ -340,6 +389,14 @@ def main():
                   f"{ctl['max_age_s_max']*1e3:.1f}ms; holdback "
                   f"{hb['held']} held → {hb['wins']} wins / "
                   f"{hb['losses']} losses / {hb['flushed']} flushed")
+        if args.metrics_out:
+            met, al = m.get("metrics", {}), m.get("alerts", {})
+            fired = sum(r["fired"] for r in al.get("rules", {}).values())
+            print(f"metrics: {met.get('scrapes', 0)} scrapes / "
+                  f"{met.get('series', 0)} series across "
+                  f"{met.get('hosts', 0)} hosts; alerts: "
+                  f"{al.get('events_total', 0)} transitions, {fired} firings "
+                  f"→ {args.metrics_out}")
         if args.telemetry_out:
             print(f"cluster telemetry JSON → {args.telemetry_out}")
         if args.trace_out:
@@ -360,6 +417,10 @@ def main():
             inflight_depth=args.inflight_depth,
             compilation_cache_dir=args.compilation_cache_dir,
             telemetry_out=args.telemetry_out, trace_out=args.trace_out,
+            metrics_out=args.metrics_out,
+            metrics_period_s=args.metrics_period_ms / 1e3,
+            metrics_port=args.metrics_port,
+            deterministic_timing=args.deterministic_timing,
             realtime=args.realtime, arrival_batch=args.arrival_batch,
             columnar_admission=not args.scalar_admission)
         lat = snap["latency"]
@@ -392,6 +453,16 @@ def main():
             print(f"controller: {ctl['updates']} updates [{classes}]; "
                   f"holdback {hb['held']} held → {hb['wins']} wins / "
                   f"{hb['losses']} losses / {hb['flushed']} flushed")
+        if args.metrics_out or args.metrics_port:
+            met, al = snap.get("metrics", {}), snap.get("alerts", {})
+            states = {name: r["state"] for name, r in
+                      al.get("rules", {}).items() if r["state"] != "inactive"}
+            fired = sum(r["fired"] for r in al.get("rules", {}).values())
+            print(f"metrics: {met.get('scrapes', 0)} scrapes / "
+                  f"{met.get('series', 0)} series; alerts: "
+                  f"{al.get('events_total', 0)} transitions, {fired} firings"
+                  + (f", non-inactive {states}" if states else "")
+                  + (f" → {args.metrics_out}" if args.metrics_out else ""))
         if args.telemetry_out:
             print(f"telemetry JSON → {args.telemetry_out}")
         if args.trace_out:

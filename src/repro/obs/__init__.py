@@ -16,14 +16,34 @@ Three pillars (the measurement substrate every perf PR is judged against):
   vs host/gather gaps, published in every telemetry snapshot;
 * :mod:`validate` — trace-file schema validator (balanced spans, every
   request reaching a terminal ``complete``/``reject`` event) — the CI
-  contract for ``--trace-out`` files.
+  contract for ``--trace-out`` files, plus the OpenMetrics exposition
+  validator backing ``--metrics-out``;
+* :mod:`metrics`  — continuous metrics: a collector-driven
+  :class:`MetricsRegistry` scraped on a fixed serving-clock cadence into
+  bounded time-series rings, exposed as OpenMetrics text (and optionally
+  over HTTP in wall-clock mode) — deterministic under the virtual clock;
+* :mod:`alerts`   — SLO alerting over the scraped series: multi-window
+  multi-burn-rate and threshold rules driving a pending→firing→resolved
+  state machine, with firings emitted as Tracer instants on the Perfetto
+  timeline.
 """
-from repro.obs.export import chrome_trace, write_chrome_trace
-from repro.obs.ledger import PenaltyLedger, merge_penalty_sections
+from repro.obs.alerts import (AlertEngine, BurnRateRule, ThresholdRule,
+                              default_cluster_rules, default_serve_rules,
+                              merge_alert_sections)
+from repro.obs.export import (chrome_trace, read_text, write_chrome_trace,
+                              write_text)
+from repro.obs.ledger import (PenaltyLedger, launch_cycles,
+                              merge_penalty_sections)
+from repro.obs.metrics import (MetricsRegistry, expose_registries,
+                               serve_metrics_http)
 from repro.obs.tracing import Tracer
-from repro.obs.validate import validate_chrome_trace
+from repro.obs.validate import validate_chrome_trace, validate_openmetrics
 
 __all__ = [
     "Tracer", "chrome_trace", "write_chrome_trace", "PenaltyLedger",
-    "merge_penalty_sections", "validate_chrome_trace",
+    "merge_penalty_sections", "launch_cycles", "validate_chrome_trace",
+    "validate_openmetrics", "MetricsRegistry", "expose_registries",
+    "serve_metrics_http", "AlertEngine", "BurnRateRule", "ThresholdRule",
+    "default_serve_rules", "default_cluster_rules", "merge_alert_sections",
+    "read_text", "write_text",
 ]

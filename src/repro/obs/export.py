@@ -20,12 +20,32 @@ Export is pure: it never mutates the tracer, so it can run mid-flight.
 """
 from __future__ import annotations
 
+import gzip
 import json
 
 # Stable thread ordering inside each host process: lifecycle first, then the
-# device/dispatch tracks, counters last.  Unknown tracks sort after these.
+# device/dispatch tracks, counters and alerts last.  Unknown tracks sort
+# after these.
 _TRACK_ORDER = ("serve", "batcher", "holdback", "device", "cluster",
-                "counters")
+                "counters", "alerts")
+
+
+def open_text(path: str, mode: str = "rt"):
+    """Open a text file, transparently gzipped when the path ends in .gz —
+    the one place ``--trace-out`` / ``--metrics-out`` compression lives."""
+    if str(path).endswith(".gz"):
+        return gzip.open(path, mode)
+    return open(path, mode.rstrip("t") or "r")
+
+
+def write_text(path: str, text: str) -> None:
+    with open_text(path, "wt") as f:
+        f.write(text)
+
+
+def read_text(path: str) -> str:
+    with open_text(path, "rt") as f:
+        return f.read()
 
 
 def _tid(track: str) -> int:
@@ -82,6 +102,6 @@ def chrome_trace(events: list[dict], *, label: str = "repro.serve") -> dict:
 def write_chrome_trace(path: str, events: list[dict], *,
                        label: str = "repro.serve") -> dict:
     trace = chrome_trace(events, label=label)
-    with open(path, "w") as f:
+    with open_text(path, "wt") as f:
         json.dump(trace, f)
     return trace

@@ -50,6 +50,44 @@ def _shares(cycles: dict) -> dict:
     return {k: cycles[k] / total for k in SHARE_KEYS}
 
 
+def launch_cycles(*, d: int, live_rows: int, launched_rows: int,
+                  profile: dict, m_tile: int = 128,
+                  k_occupancy: float = 1.0) -> dict:
+    """Price one launch in modeled device cycles (the ledger's cycle model,
+    factored out so callers can use it without a ledger — notably
+    ``ServeConfig.deterministic_timing``, which substitutes
+    ``(mxu + vpu) / DEVICE_HZ`` for the wall-clock service measurement to
+    make the whole serving loop bit-reproducible).
+
+    Returns ``{"mxu", "vpu", "mxu_productive", "arithmetic_stall",
+    "spatial_pad", "device_s"}`` — device bins only; ``host_gap`` needs a
+    measured service time and stays the ledger's business.
+    """
+    m_tile = max(1, int(m_tile))
+    launched = max(1, int(launched_rows))
+    live = min(int(live_rows), launched)
+    m_slots = -(-launched // m_tile) * m_tile
+    k_occ = min(max(float(k_occupancy), 0.0), 1.0)
+
+    macs = (m_slots * float(d) * float(d) * profile["data_limbs"]
+            * profile["tw_limbs"] * profile["n_channels"])
+    mxu = macs / MXU_MACS_PER_CYCLE
+    lane_ops = (profile["n_folds"] * launched * float(d)
+                * profile["n_diag"] * VPU_OPS_PER_DIAG)
+    vpu = lane_ops / VPU_LANES
+
+    live_m = live / m_slots
+    live_r = live / launched
+    mxu_productive = mxu * live_m * k_occ
+    arithmetic_stall = vpu * live_r
+    spatial_pad = (mxu - mxu_productive) + vpu * (1.0 - live_r)
+    return {"mxu": mxu, "vpu": vpu,
+            "mxu_productive": mxu_productive,
+            "arithmetic_stall": arithmetic_stall,
+            "spatial_pad": spatial_pad,
+            "device_s": (mxu + vpu) / DEVICE_HZ}
+
+
 class PenaltyLedger:
     """Accumulates per-launch cycle attributions, keyed by workload."""
 
@@ -73,23 +111,14 @@ class PenaltyLedger:
         """
         launched = max(1, int(launched_rows))
         live = min(int(live_rows), launched)
-        m_slots = -(-launched // self.m_tile) * self.m_tile
-        k_occ = min(max(float(k_occupancy), 0.0), 1.0)
-
-        macs = (m_slots * float(d) * float(d) * profile["data_limbs"]
-                * profile["tw_limbs"] * profile["n_channels"])
-        mxu = macs / MXU_MACS_PER_CYCLE
-        lane_ops = (profile["n_folds"] * launched * float(d)
-                    * profile["n_diag"] * VPU_OPS_PER_DIAG)
-        vpu = lane_ops / VPU_LANES
-
-        live_m = live / m_slots
-        live_r = live / launched
-        mxu_productive = mxu * live_m * k_occ
-        arithmetic_stall = vpu * live_r
-        spatial_pad = (mxu - mxu_productive) + vpu * (1.0 - live_r)
+        cyc = launch_cycles(d=d, live_rows=live, launched_rows=launched,
+                            profile=profile, m_tile=self.m_tile,
+                            k_occupancy=k_occupancy)
+        mxu_productive = cyc["mxu_productive"]
+        arithmetic_stall = cyc["arithmetic_stall"]
+        spatial_pad = cyc["spatial_pad"]
         measured = max(0.0, float(service_s)) * DEVICE_HZ
-        host_gap = max(0.0, measured - (mxu + vpu))
+        host_gap = max(0.0, measured - (cyc["mxu"] + cyc["vpu"]))
 
         w = self._w.setdefault(workload, {
             "launches": 0, "batches": 0, "live_rows": 0, "launched_rows": 0,

@@ -16,13 +16,35 @@ against the protocol the serving stack emits:
 
 Violations raise ``ValueError`` with the offending id; success returns a
 stats dict (span/chain counts) the smoke tests assert on.
+
+``validate_openmetrics`` plays the same role for ``--metrics-out``: it
+parses the OpenMetrics text exposition (backfill flavour — repeated
+timestamped samples per series) and asserts family headers, sample syntax,
+per-series timestamp monotonicity, counter monotonicity, and the ``# EOF``
+terminator.
 """
 from __future__ import annotations
 
+import re
+
 _PHASES = {"B", "E", "b", "e", "i", "C", "M"}
 
+_SAMPLE_RE = re.compile(
+    r"^([a-zA-Z_:][a-zA-Z0-9_:]*)"          # metric name
+    r"(\{[^}]*\})?"                          # optional labels
+    r" (-?(?:[0-9.]+(?:[eE][+-]?[0-9]+)?|inf|nan))"   # value
+    r"(?: (-?[0-9.]+(?:[eE][+-]?[0-9]+)?))?$")        # optional timestamp
 
-def validate_chrome_trace(trace: dict) -> dict:
+
+def validate_chrome_trace(trace) -> dict:
+    """Accepts the trace dict itself or a path to a trace file (plain or
+    ``.gz`` — the ``--trace-out foo.json.gz`` round-trip)."""
+    if isinstance(trace, (str, bytes)):
+        import json
+
+        from repro.obs.export import open_text
+        with open_text(trace, "rt") as f:
+            trace = json.load(f)
     if not isinstance(trace, dict) or "traceEvents" not in trace:
         raise ValueError("trace must be a dict with a 'traceEvents' list")
     events = trace["traceEvents"]
@@ -132,3 +154,61 @@ def validate_chrome_trace(trace: dict) -> dict:
         "batches": n_cat("batch"),
         "launches": n_cat("launch"),
     }
+
+
+def validate_openmetrics(text: str) -> dict:
+    """Validate an OpenMetrics exposition (see module docstring); pass a
+    path (plain or ``.gz``) instead of text to validate a ``--metrics-out``
+    file from disk.  Returns ``{"families", "series", "samples"}``."""
+    if "\n" not in text and (text.endswith(".gz") or text.endswith(".om")
+                             or text.endswith(".txt")
+                             or not text.lstrip().startswith("#")):
+        from repro.obs.export import read_text
+        text = read_text(text)
+    lines = text.splitlines()
+    if not lines or lines[-1] != "# EOF":
+        raise ValueError("exposition must terminate with '# EOF'")
+    kinds: dict[str, str] = {}
+    last_ts: dict[tuple, float] = {}
+    last_val: dict[tuple, float] = {}
+    samples = 0
+    for i, line in enumerate(lines[:-1]):
+        if not line:
+            raise ValueError(f"line {i}: empty line inside exposition")
+        if line.startswith("#"):
+            parts = line.split(" ", 3)
+            if len(parts) < 3 or parts[1] not in ("HELP", "TYPE"):
+                raise ValueError(f"line {i}: bad comment line {line!r}")
+            if parts[1] == "TYPE":
+                name, kind = parts[2], parts[3] if len(parts) > 3 else ""
+                if kind not in ("counter", "gauge", "histogram", "summary",
+                                "unknown"):
+                    raise ValueError(f"line {i}: unknown TYPE {kind!r}")
+                if name in kinds:
+                    raise ValueError(f"line {i}: duplicate TYPE for {name}")
+                kinds[name] = kind
+            continue
+        m = _SAMPLE_RE.match(line)
+        if m is None:
+            raise ValueError(f"line {i}: unparseable sample {line!r}")
+        name, labels, value, ts = m.groups()
+        if name not in kinds:
+            raise ValueError(f"line {i}: sample for {name} precedes its "
+                             f"'# TYPE' header")
+        samples += 1
+        key = (name, labels or "")
+        if ts is not None:
+            t = float(ts)
+            if key in last_ts and t <= last_ts[key]:
+                raise ValueError(f"line {i}: non-increasing timestamp for "
+                                 f"{key}: {t} after {last_ts[key]}")
+            last_ts[key] = t
+        v = float(value)
+        if kinds[name] == "counter":
+            if key in last_val and v < last_val[key]:
+                raise ValueError(f"line {i}: counter {key} decreased "
+                                 f"({last_val[key]} -> {v})")
+            last_val[key] = v
+    return {"families": len(kinds),
+            "series": len(set(last_ts) | set(last_val)),
+            "samples": samples}

@@ -51,7 +51,34 @@ control trajectories are deterministic and unit-testable.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DecisionRecord:
+    """One flight-recorder entry: everything the law saw and everything it
+    chose, so "why rung X at t" is machine-answerable from the snapshot.
+
+    ``reason`` is the law branch that moved a setpoint: ``"starving"`` /
+    ``"overloaded"`` (the age/occupancy branches) or ``"queue_model"`` (the
+    rung re-snap alone, age held).  ``*_from`` are the pre-step setpoints.
+    """
+    ts: float
+    cls: str                      # "{workload}/{d_bucket}"
+    reason: str
+    rate_hz: float
+    m_occupancy_ewma: float
+    depth_ewma: float
+    queue_depth: int
+    cluster_depth: float | None
+    predicted_rows: float
+    target_rows_from: int
+    target_rows: int
+    max_age_from_s: float
+    max_age_s: float
+    occupancy_from: float | None
+    occupancy_close: float | None
 
 
 @dataclasses.dataclass
@@ -88,7 +115,8 @@ class AdaptiveController:
                  occupancy_ceil: float = 0.95,
                  holdback_lambda: float = 0.0,
                  holdback_slo_fraction: float = 0.5,
-                 slo_deadline_s: float | None = None):
+                 slo_deadline_s: float | None = None,
+                 recorder_capacity: int = 512):
         if not ladder:
             raise ValueError("controller needs a non-empty rung ladder")
         if not 0.0 < alpha <= 1.0:
@@ -126,6 +154,13 @@ class AdaptiveController:
         self._state: dict[tuple, _ClassState] = {}
         self.updates = 0
         self._cluster_depth_max = 0.0
+        # Flight recorder: a bounded ring of setpoint-change records plus a
+        # lifetime decision count; ``last_decision`` is the record appended
+        # by the most recent observe_dispatch, or None if it held.
+        self.flight: collections.deque = collections.deque(
+            maxlen=max(1, int(recorder_capacity)))
+        self.decisions = 0
+        self.last_decision: DecisionRecord | None = None
 
     # --- state access ---------------------------------------------------------
 
@@ -175,9 +210,12 @@ class AdaptiveController:
                          queue_depth: int, now: float,
                          cluster_depth: float | None = None):
         """One control step: fold a completed launch into the EWMAs and move
-        the class's setpoints (see the module docstring for the law)."""
-        del now  # the law is event-driven; kept for clock symmetry/telemetry
+        the class's setpoints (see the module docstring for the law).
+
+        ``now`` timestamps the flight-recorder entry when a setpoint moves;
+        the law itself stays event-driven."""
         st = self._st(key)
+        prev = (st.target_rows, st.max_age_s, st.occupancy_close)
         a = self.alpha
         m_occ = min(1.0, live_rows / self.n_c_max)
         st.m_occupancy = (m_occ if st.m_occupancy is None else
@@ -214,6 +252,24 @@ class AdaptiveController:
         # else: at the setpoint — hold, don't chatter.
         st.updates += 1
         self.updates += 1
+        if (st.target_rows, st.max_age_s, st.occupancy_close) != prev:
+            reason = ("starving" if starving
+                      else "overloaded" if overloaded else "queue_model")
+            rec = DecisionRecord(
+                ts=float(now), cls=f"{key[0]}/{key[1]}", reason=reason,
+                rate_hz=st.rate_hz, m_occupancy_ewma=st.m_occupancy,
+                depth_ewma=st.depth, queue_depth=int(queue_depth),
+                cluster_depth=(float(cluster_depth)
+                               if cluster_depth is not None else None),
+                predicted_rows=predicted,
+                target_rows_from=prev[0], target_rows=st.target_rows,
+                max_age_from_s=prev[1], max_age_s=st.max_age_s,
+                occupancy_from=prev[2], occupancy_close=st.occupancy_close)
+            self.flight.append(rec)
+            self.decisions += 1
+            self.last_decision = rec
+        else:
+            self.last_decision = None
 
     # --- holdback pricing -----------------------------------------------------
 
@@ -264,6 +320,11 @@ class AdaptiveController:
             "updates": self.updates,
             "classes": classes,
             "cluster_depth_max": self._cluster_depth_max,
+            "flight_recorder": {
+                "decisions": self.decisions,
+                "capacity": self.flight.maxlen,
+                "records": [dataclasses.asdict(r) for r in self.flight],
+            },
             "bounds": {
                 "rung_floor": self.rung_floor,
                 "rung_ceil": self.rung_ceil,

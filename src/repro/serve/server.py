@@ -33,7 +33,9 @@ from repro.core import validator as V
 from repro.core.scheduler.coscheduler import (SliceCoScheduler,
                                               default_row_ladder)
 from repro.core.scheduler.rectangular import packing_metrics
-from repro.obs.ledger import PenaltyLedger
+from repro.obs.alerts import AlertEngine, default_serve_rules
+from repro.obs.ledger import PenaltyLedger, launch_cycles
+from repro.obs.metrics import MetricsRegistry
 from repro.obs.tracing import Tracer
 from repro.serve.admission import AdmissionController, AdmissionDecision
 from repro.serve.batcher import CLOSE_DRAIN, ClosedBatch, ContinuousBatcher
@@ -187,6 +189,24 @@ class ServeConfig:
     # on: it prices launches from telemetry the server already computes.
     tracing: bool = False
     trace_capacity: int = 1 << 16
+    # Continuous metrics + alerting (repro.obs.metrics / repro.obs.alerts):
+    # a collector-driven registry scraped on a fixed serving-clock cadence
+    # from telemetry / controller / penalty ledger, with an AlertEngine
+    # evaluating multi-window burn-rate and threshold rules after every
+    # scrape.  ``alert_rules`` overrides the stock rule set (None → the
+    # default_serve_rules scaled off max_age_s / slo_deadline_s).
+    metrics: bool = False
+    metrics_period_s: float = 0.005
+    metrics_capacity: int = 4096
+    alert_rules: tuple | None = None
+    # Replace the wall-clock service-time measurement with the penalty
+    # ledger's modeled device time ((mxu+vpu)/DEVICE_HZ per launch).  Every
+    # downstream wall-derived quantity — admission service-rate EWMA,
+    # request latencies, penalty host_gap, scraped series, alert logs —
+    # then depends only on the virtual clock and the trace, so two
+    # identical runs are bit-identical end to end.  Off by default: real
+    # deployments want measured time.
+    deterministic_timing: bool = False
     # bound the latency/queue-wait reservoirs: past this many samples each
     # histogram collapses to a log-bucket sketch (bounded memory, ≤ ~4.5%
     # relative quantile error; count/mean/max stay exact).  None = exact
@@ -308,6 +328,25 @@ class CryptoServer:
         self.telemetry.attach_section("penalty", self.ledger.snapshot)
         if self.tracer is not None:
             self.telemetry.attach_section("trace", self.tracer.snapshot)
+        # Continuous metrics + alerting: collector-driven scrape at the
+        # serving-clock cadence; the alert engine evaluates right after
+        # every scrape so alert timestamps are scrape timestamps.
+        self.metrics = None
+        self.alerts = None
+        if cfg.metrics:
+            self.metrics = MetricsRegistry(period_s=cfg.metrics_period_s,
+                                           capacity=cfg.metrics_capacity,
+                                           host=self.cos.host)
+            self._describe_metrics()
+            self.metrics.add_collector(self._metrics_samples)
+            rules = (cfg.alert_rules if cfg.alert_rules is not None
+                     else default_serve_rules(
+                         max_age_s=cfg.max_age_s,
+                         slo_deadline_s=cfg.slo_deadline_s))
+            self.alerts = AlertEngine(self.metrics, rules,
+                                      tracer=self.tracer, host=self.cos.host)
+            self.telemetry.attach_section("metrics", self.metrics.snapshot)
+            self.telemetry.attach_section("alerts", self.alerts.snapshot)
         # Zero-sync pipeline state: batches validated + staged but not yet
         # launched, per-class launch rings of in-flight groups awaiting
         # gather (inflight_depth == 1 keeps the whole event's staged set in
@@ -605,7 +644,136 @@ class CryptoServer:
             self._ledger_profiles[key] = prof
         return prof
 
+    # --- metrics scrape -------------------------------------------------------
+
+    def _describe_metrics(self):
+        """Family metadata for everything `_metrics_samples` can emit."""
+        m = self.metrics
+        m.describe("repro_admission_decisions_total", "counter",
+                   "Admission decisions (all reasons).")
+        m.describe("repro_admission_rejected_total", "counter",
+                   "Rejected admissions by reason.")
+        m.describe("repro_admission_slo_miss_total", "counter",
+                   "Rejections by the local or cluster SLO gate.")
+        m.describe("repro_requests_served_total", "counter",
+                   "Requests resolved through dispatched batches.")
+        m.describe("repro_batches_closed_total", "counter",
+                   "Closed batches by close reason.")
+        m.describe("repro_service_seconds_total", "counter",
+                   "Accumulated dispatch service time.", wall=True)
+        m.describe("repro_queue_depth", "gauge",
+                   "Open batcher rows at the last scrape.")
+        m.describe("repro_pending_load", "gauge",
+                   "Rows queued, held, or in flight (the admission view).")
+        m.describe("repro_inflight_groups", "gauge",
+                   "Launch groups on the async ring awaiting gather.")
+        m.describe("repro_dispatch_m_occupancy", "gauge",
+                   "Mean achieved per-launch M occupancy (live/N_c_max).")
+        m.describe("repro_latency_seconds", "gauge",
+                   "Request latency quantiles.", wall=True)
+        m.describe("repro_queue_wait_seconds", "gauge",
+                   "Queue-wait quantiles.", wall=True)
+        m.describe("repro_penalty_share", "gauge",
+                   "Modeled-cycle share per penalty bin (all workloads).",
+                   wall=True)
+        m.describe("repro_penalty_arithmetic_stall_share", "gauge",
+                   "Arithmetic-stall share of total modeled cycles.",
+                   wall=True)
+        m.describe("repro_controller_decisions_total", "counter",
+                   "Flight-recorder entries (setpoint changes).")
+        m.describe("repro_controller_target_rows", "gauge",
+                   "Adaptive target ladder rung per class.")
+        m.describe("repro_controller_max_age_seconds", "gauge",
+                   "Adaptive age trigger per class.")
+
+    def _metrics_samples(self, now: float):
+        """The scrape collector: O(series) reads of running state, no event
+        walks (``Telemetry.live`` exists so this never touches the record
+        lists).  Gauges that are undefined before their first event (M
+        occupancy, penalty shares) are withheld rather than emitted as 0 —
+        an absent series keeps threshold alerts inactive instead of firing
+        on a cold start."""
+        del now
+        ac = self.telemetry.admission_counts
+        live = self.telemetry.live
+        out = [
+            ("repro_admission_decisions_total", (), sum(ac.values())),
+            ("repro_admission_slo_miss_total", (),
+             ac.get("slo_miss", 0) + ac.get("cluster_slo_miss", 0)),
+            ("repro_requests_served_total", (), live["requests_served"]),
+            ("repro_service_seconds_total", (), live["service_s_total"]),
+            ("repro_queue_depth", (), self.batcher.depth),
+            ("repro_pending_load", (), self.pending_load),
+            ("repro_inflight_groups", (), self.inflight_groups),
+        ]
+        for reason, n in ac.items():
+            if reason != "ok":
+                out.append(("repro_admission_rejected_total",
+                            (("reason", reason),), n))
+        for reason, n in live["close_reasons"].items():
+            out.append(("repro_batches_closed_total",
+                        (("reason", reason),), n))
+        if live["dispatches"]:
+            out.append(("repro_dispatch_m_occupancy", (),
+                        live["m_occupancy_sum"] / live["dispatches"]))
+        if len(self.telemetry.latency):
+            for q in (50, 95, 99):
+                out.append(("repro_latency_seconds", (("q", f"p{q}"),),
+                            self.telemetry.latency.percentile(q)))
+                out.append(("repro_queue_wait_seconds", (("q", f"p{q}"),),
+                            self.telemetry.queue_wait.percentile(q)))
+        # Penalty bins aggregated across workloads: the alertable version of
+        # the ledger's per-workload decomposition.
+        bins = {k: 0.0 for k in ("mxu_productive", "arithmetic_stall",
+                                 "spatial_pad", "host_gap")}
+        for w in self.ledger._w.values():
+            for k in bins:
+                bins[k] += w["cycles"][k]
+        total = sum(bins.values())
+        if total > 0.0:
+            for k, v in bins.items():
+                out.append(("repro_penalty_share", (("bin", k),), v / total))
+            out.append(("repro_penalty_arithmetic_stall_share", (),
+                        bins["arithmetic_stall"] / total))
+        if self.controller is not None:
+            out.append(("repro_controller_decisions_total", (),
+                        self.controller.decisions))
+            for (w, b), _ in self.controller._state.items():
+                cls = (("class", f"{w}/{b}"),)
+                out.append(("repro_controller_target_rows", cls,
+                            self.controller.target_rows((w, b))))
+                out.append(("repro_controller_max_age_seconds", cls,
+                            self.controller.max_age_s((w, b))))
+        return out
+
+    def _scrape_metrics(self, now: float, final: bool = False):
+        """Cadence-gated scrape + alert evaluation — the `_dispatch` tail
+        hook.  ``final`` (drain) forces one terminal scrape so the last
+        events of a run are always sampled (strict timestamp monotonicity
+        in the registry makes a same-instant force a no-op)."""
+        if self.metrics is None:
+            return
+        scraped = (self.metrics.scrape(now) if final
+                   else self.metrics.maybe_scrape(now))
+        if scraped and self.alerts is not None:
+            self.alerts.evaluate(now)
+
     # --- observability export -------------------------------------------------
+
+    def metrics_text(self) -> str:
+        """OpenMetrics exposition of the full scraped ring (backfill
+        flavour: every retained sample, virtual-clock timestamps)."""
+        if self.metrics is None:
+            raise RuntimeError("metrics are off — construct the server with "
+                               "ServeConfig(metrics=True)")
+        return self.metrics.expose_text()
+
+    def write_metrics(self, path: str) -> str:
+        """Write the OpenMetrics exposition (gzip when path ends in .gz)."""
+        from repro.obs.export import write_text
+        text = self.metrics_text()
+        write_text(path, text)
+        return text
 
     def trace_events(self) -> list[dict]:
         """The tracer's buffered events (empty when tracing is off)."""
@@ -777,6 +945,10 @@ class CryptoServer:
             tr.counter("queue_depth", now, self.batcher.depth)
             tr.counter("inflight_groups", now, self.inflight_groups)
             tr.counter("held_batches", now, len(self._held))
+        # Metrics ride the same event edge: every submit/pump/drain passes
+        # through here, so a cadence check per event is the whole hot-path
+        # cost (the ≤5% rows/s gate in bench_dispatch counts on this).
+        self._scrape_metrics(now, final=final)
 
     def _launch(self, staged: list[ClosedBatch]):
         t0 = time.perf_counter()
@@ -796,6 +968,19 @@ class CryptoServer:
         t1 = time.perf_counter()
         results = self.cos.gather(flight)
         service_s = launch_s + time.perf_counter() - t1
+        if self.config.deterministic_timing:
+            # Substitute the ledger's modeled device time for the wall
+            # measurement: the one wall-clock leak into the serving loop,
+            # replaced so latencies, admission EWMAs, penalty bins, scraped
+            # series, and alert logs are functions of the trace alone.
+            service_s = sum(
+                launch_cycles(
+                    d=e["d_bucket"], live_rows=e["live_rows"],
+                    launched_rows=e["launched_rows"],
+                    profile=self._ledger_profile(e["workload"],
+                                                 e["d_bucket"]),
+                    m_tile=self.config.n_c_max)["device_s"]
+                for e in log)
         # Attribute wall time to batches by live-row share (one synchronised
         # launch group; per-batch device timing is not observable from here).
         total_rows = sum(cb.batch.n_c for cb in closed) or 1
@@ -849,6 +1034,16 @@ class CryptoServer:
                                self.controller.target_rows(key))
                     tr.counter(f"max_age_s[{w}/d{b}]", now,
                                self.controller.max_age_s(key))
+                    dec = self.controller.last_decision
+                    if dec is not None:
+                        # Flight-recorder echo on the timeline: the counter
+                        # tracks show *what* the setpoints did, the instant
+                        # says *why* (the law branch that moved them).
+                        tr.instant("setpoint", now, track="counters",
+                                   args={"class": dec.cls,
+                                         "reason": dec.reason,
+                                         "target_rows": dec.target_rows,
+                                         "max_age_s": dec.max_age_s})
             self.telemetry.record_dispatch(DispatchRecord(
                 workload=entry["workload"], d_bucket=entry["d_bucket"],
                 n_batches=entry["n_batches"], live_rows=live,

@@ -207,6 +207,19 @@ class Telemetry:
         # Extra snapshot sections attached by the serving layer (e.g. the
         # adaptive controller's state) — name -> zero-arg provider.
         self._sections: dict = {}
+        # O(1) running counters for the metrics scrape path: snapshot() walks
+        # every event record (fine once per run, too hot per scrape), so the
+        # scrape collectors read these instead.
+        self.live = {
+            "requests_served": 0,      # Σ n_c over closed batches
+            "batches": 0,
+            "service_s_total": 0.0,
+            "close_reasons": {},       # reason -> count
+            "dispatches": 0,
+            "live_rows": 0,
+            "launched_rows": 0,
+            "m_occupancy_sum": 0.0,    # over DispatchRecords
+        }
 
     def attach_section(self, name: str, provider):
         """Register a callable whose result is exported under ``name`` in
@@ -220,9 +233,20 @@ class Telemetry:
         self.batches.append(rec)
         self._queue_depth_sum += rec.queue_depth
         self._queue_depth_max = max(self._queue_depth_max, rec.queue_depth)
+        live = self.live
+        live["requests_served"] += rec.n_c
+        live["batches"] += 1
+        live["service_s_total"] += rec.service_s
+        live["close_reasons"][rec.close_reason] = (
+            live["close_reasons"].get(rec.close_reason, 0) + 1)
 
     def record_dispatch(self, rec: DispatchRecord):
         self.dispatches.append(rec)
+        live = self.live
+        live["dispatches"] += 1
+        live["live_rows"] += rec.live_rows
+        live["launched_rows"] += rec.launched_rows
+        live["m_occupancy_sum"] += rec.m_occupancy
 
     def record_admission(self, reason: str):
         self.admission_counts[reason] = self.admission_counts.get(reason, 0) + 1
