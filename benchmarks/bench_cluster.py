@@ -12,7 +12,15 @@ paper's §7 economics measured at cluster scale).
 
   PYTHONPATH=src python benchmarks/bench_cluster.py [--rates 512,1024]
       [--hosts 1,2,4] [--dists unique,zipf,hot] [--duration 0.02]
-      [--out bench_cluster.json] [--dry-run]
+      [--out bench_cluster.json] [--fault-plan kill@0.5:h1] [--dry-run]
+
+``--fault-plan`` (times are fractions of the run) prices the failover
+transient: without ``--dry-run`` it appends one ``*.fault`` point to the
+record; with ``--dry-run`` it runs the chaos smoke instead — exactly-once
+rid audit, zero lost requests, and ``gossip_silence`` firing *and*
+resolving in the exported fleet trace.  A plan that kills a host without
+recovering it gets ``recover@0.9:hN`` appended (the smoke must observe the
+rejoin side too); the addition is printed.
 
 Also exposes ``run()`` yielding the aggregator's CSV rows.
 """
@@ -36,8 +44,12 @@ DISTRIBUTIONS = ("unique", "zipf", "hot")
 
 def sweep(rates=RATE_LADDER_FAST, hosts=HOST_LADDER, dists=DISTRIBUTIONS, *,
           duration_s=0.02, n_c=8, max_age_s=0.005, d_uniform=256, seed=0,
-          n_tenants=64, gossip_period_s=0.002,
-          coscheduler_factory=None, trace_out=None) -> list[dict]:
+          n_tenants=64, gossip_period_s=0.002, fault_plan=None,
+          shed_watermark=None, coscheduler_factory=None,
+          trace_out=None) -> list[dict]:
+    """Grid sweep; ``fault_plan`` is a fraction-of-duration spec *string*
+    (``kill@0.5:h1,...``) so each grid cell materialises its own
+    consumed-once plan."""
     from repro.launch.serve import serve_crypto_cluster
 
     points = []
@@ -56,13 +68,15 @@ def sweep(rates=RATE_LADDER_FAST, hosts=HOST_LADDER, dists=DISTRIBUTIONS, *,
                     validate=False,      # HLO validation is tested elsewhere;
                                          # this sweep measures the fleet path
                     gossip_period_s=gossip_period_s, trace=trace,
-                    trace_out=traced,
+                    trace_out=traced, fault_plan=fault_plan,
+                    shed_watermark=shed_watermark,
                     coscheduler_factory=coscheduler_factory)
                 served = sum(1 for h in load.handles
                              if h.done() and not h.rejected)
                 m = snap["merged"]
+                suffix = ".fault" if fault_plan else ""
                 points.append({
-                    "config": f"h{n_hosts}.{dist}.rate{rate}",
+                    "config": f"h{n_hosts}.{dist}.rate{rate}{suffix}",
                     "rate_hz": rate,
                     "hosts": n_hosts,
                     "tenant_dist": dist,
@@ -92,7 +106,102 @@ def sweep(rates=RATE_LADDER_FAST, hosts=HOST_LADDER, dists=DISTRIBUTIONS, *,
                     "drain_barrier": snap["drain_barrier"],
                     "setup_wall_s": time.time() - t0,
                 })
+                if fault_plan:
+                    fo = snap["failover"]
+                    points[-1]["fault_plan"] = fault_plan
+                    points[-1]["failover"] = {
+                        **fo["summary"], "lost": fo["lost"],
+                        "sheds": fo["sheds"], "diverted": fo["diverted"],
+                        "ingress": fo["ingress"],
+                        # detection latency: gossip silence the fleet sat on
+                        # before each cordon (the transient the shed
+                        # watermark prices)
+                        "detection_silence_s": [
+                            ev["silence_s"] for ev in fo["events"]
+                            if ev["kind"] == "cordon"],
+                    }
     return points
+
+
+def _ensure_recovery(spec: str) -> tuple[str, list[str]]:
+    """Append ``recover@0.9:hN`` for every killed-but-never-recovered host
+    so a chaos run always exercises the rejoin side (silence-alert resolve,
+    router restore).  Returns the effective spec and what was added."""
+    from repro.cluster import FaultPlan
+
+    plan = FaultPlan.parse(spec)
+    recovered = {e.host for e in plan.events if e.kind == "recover"}
+    added = [f"recover@0.9:h{h}"
+             for h in dict.fromkeys(e.host for e in plan.events
+                                    if e.kind == "kill")
+             if h not in recovered]
+    return (",".join([spec] + added) if added else spec), added
+
+
+def chaos_smoke(fault_plan: str, *, hosts=3, rate=1024, duration_s=0.02,
+                coscheduler_factory=None, trace_out=None) -> dict:
+    """One chaos cell under the smoke invariants: fleet-unique rids, every
+    handle terminal exactly once, nothing lost or double-served, and the
+    ``gossip_silence`` alert both firing and resolving in the exported
+    fleet trace.  Returns a BENCH-schema point plus the audit artifacts."""
+    import tempfile
+
+    from repro.launch.serve import serve_crypto_cluster
+    from repro.obs import validate_chrome_trace
+
+    spec, added = _ensure_recovery(fault_plan)
+    outdir = tempfile.mkdtemp(prefix="bench_cluster_chaos_")
+    trace_path = trace_out or os.path.join(outdir, "chaos_trace.json")
+    metrics_path = os.path.join(outdir, "chaos_metrics.prom")
+    t0 = time.time()
+    load, snap, dt = serve_crypto_cluster(
+        hosts=hosts, n_c=8, max_age_s=0.002, duration_s=duration_s,
+        rate_hz=rate, d_uniform=256, seed=0, validate=False,
+        fault_plan=spec, trace_out=trace_path, metrics_out=metrics_path,
+        coscheduler_factory=coscheduler_factory)
+    # exactly-once audit: fleet-unique rids, one terminal state per handle
+    rids = [h.request.request_id for h in load.handles]
+    assert len(set(rids)) == len(rids), "duplicate request ids at ingress"
+    assert all(h.done() for h in load.handles), "non-terminal handle"
+    served = sum(1 for h in load.handles if not h.rejected)
+    assert served + len(load.rejected) == len(load.handles)
+    fo = snap["failover"]
+    assert fo["lost"] == 0 and fo["limbo_pending"] == 0, fo
+    assert fo["summary"]["deduped"] == 0, fo["summary"]
+    assert fo["summary"]["cordons"] >= 1, fo["summary"]
+    by = snap["merged"]["admission"]["by_reason"]
+    assert by.get("duplicate", 0) == 0, by
+    with open(trace_path) as f:
+        fleet = json.load(f)
+    stats = validate_chrome_trace(fleet)
+    names = {ev["name"] for ev in fleet["traceEvents"]}
+    assert "alert_firing:gossip_silence" in names, \
+        "dead host never tripped the silence alert"
+    assert "alert_resolved:gossip_silence" in names, \
+        "silence alert never resolved after rejoin"
+    m = snap["merged"]
+    point = {
+        "config": f"h{hosts}.unique.rate{rate}.fault",
+        "rate_hz": rate, "hosts": hosts, "duration_s": duration_s,
+        "n_c": 8, "wall_s": dt,
+        "rows_per_s": served / dt if dt > 0 else 0.0,
+        "served": served, "rejected": len(load.rejected),
+        "fault_plan": spec,
+        "p50_s": m["latency"]["p50_s"],
+        "p95_s": m["latency"]["p95_s"],
+        "p99_s": m["latency"]["p99_s"],
+        "failover": {
+            **fo["summary"], "lost": fo["lost"], "sheds": fo["sheds"],
+            "diverted": fo["diverted"], "ingress": fo["ingress"],
+            "detection_silence_s": [ev["silence_s"] for ev in fo["events"]
+                                    if ev["kind"] == "cordon"],
+        },
+        "drain_barrier": snap["drain_barrier"],
+        "setup_wall_s": time.time() - t0,
+    }
+    return {"point": point, "added_recovery": added,
+            "trace_path": trace_path, "trace_stats": stats,
+            "metrics_path": metrics_path}
 
 
 def run(fast: bool = True):
@@ -114,11 +223,12 @@ def run(fast: bool = True):
                f";served={pt['served']};rejected={pt['rejected']}")
 
 
-def dry_run(trace_out=None) -> dict:
+def dry_run(trace_out=None, fault_plan=None) -> dict:
     """CI smoke: one tiny grid cell per distribution on a 3-host cluster;
     asserts the fleet invariants (everything served, barrier complete,
     staleness bound honored, hot tenant collapses onto one host) and that
-    the merged fleet trace is schema-valid with per-host process tracks."""
+    the merged fleet trace is schema-valid with per-host process tracks.
+    With ``fault_plan``, also runs the :func:`chaos_smoke` audit."""
     import json as _json
     import tempfile
 
@@ -149,7 +259,13 @@ def dry_run(trace_out=None) -> dict:
     per_host = hot["per_host_requests"]
     assert sorted(per_host)[:-1] == [0, 0], per_host   # one hot host only
     assert hot["imbalance_max_over_mean"] > 2.5, hot
-    return {"points": points, "trace_path": path, "trace_stats": stats}
+    doc = {"points": points, "trace_path": path, "trace_stats": stats}
+    if fault_plan:
+        chaos = chaos_smoke(fault_plan,
+                            coscheduler_factory=lambda h: shared)
+        points.append(chaos["point"])
+        doc["chaos"] = chaos
+    return doc
 
 
 def main():
@@ -168,19 +284,38 @@ def main():
                     help="record one representative fleet trace (widest "
                          "host count of the first grid cell) and write the "
                          "Perfetto JSON here")
+    ap.add_argument("--fault-plan", default=None,
+                    help="deterministic host-failure injection, times as "
+                         "fractions of the run (e.g. kill@0.5:h1); adds a "
+                         "*.fault transient point (chaos smoke under "
+                         "--dry-run)")
     ap.add_argument("--dry-run", action="store_true",
                     help="tiny 3-host grid + fleet-invariant and trace-"
                          "schema asserts (CI)")
     args = ap.parse_args()
 
     if args.dry_run:
-        doc = dry_run(trace_out=args.trace_out)
+        doc = dry_run(trace_out=args.trace_out, fault_plan=args.fault_plan)
         stats = doc["trace_stats"]
+        hot = next(pt for pt in doc["points"]
+                   if pt.get("tenant_dist") == "hot")
         print(f"dry run ok: {len(doc['points'])} points, "
               f"hot-tenant imbalance "
-              f"{doc['points'][-1]['imbalance_max_over_mean']:.2f}; "
+              f"{hot['imbalance_max_over_mean']:.2f}; "
               f"fleet trace schema-valid ({stats['requests']} requests, "
               f"{stats['events']} events) → {doc['trace_path']}")
+        if args.fault_plan:
+            chaos = doc["chaos"]
+            if chaos["added_recovery"]:
+                print("fault plan had no recovery for killed hosts — "
+                      f"appended {','.join(chaos['added_recovery'])}")
+            f = chaos["point"]["failover"]
+            print(f"chaos smoke ok: plan {chaos['point']['fault_plan']} → "
+                  f"{f['cordons']} cordon(s) "
+                  f"({f['cordons_by_cause']}), replayed={f['replayed']} "
+                  f"recovered={f['recovered']} deduped={f['deduped']} "
+                  f"lost={f['lost']}; gossip_silence fired and resolved "
+                  f"→ {chaos['trace_path']}")
         return
 
     from repro.core.scheduler.coscheduler import SliceCoScheduler
@@ -202,6 +337,16 @@ def main():
     # rows_per_s measures the fleet path, not XLA
     sweep(rates, hosts, dists, **kw)
     points = sweep(rates, hosts, dists, trace_out=args.trace_out, **kw)
+    if args.fault_plan:
+        # one failover-transient point rides along with the healthy grid:
+        # same schema, ``.fault`` config suffix, plus the failover summary
+        # and per-cordon detection silence
+        chaos = chaos_smoke(args.fault_plan,
+                            coscheduler_factory=lambda h: shared)
+        if chaos["added_recovery"]:
+            print("fault plan had no recovery for killed hosts — "
+                  f"appended {','.join(chaos['added_recovery'])}")
+        points.append(chaos["point"])
     from benchmarks.common import perf_record
     doc = perf_record("cluster", points)
     text = json.dumps(doc, indent=2, sort_keys=True)

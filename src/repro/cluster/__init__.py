@@ -7,8 +7,9 @@ drains.  This package shards the single-host :mod:`repro.serve` runtime
 across N simulated host slices, all under the same deterministic virtual
 clock:
 
-* :mod:`router`    — tenant-hash ingress (stable CRC32 partition, explicit
-  tenant→host pinning overrides);
+* :mod:`router`    — tenant ingress by rendezvous (highest-random-weight)
+  hashing over the *live* host set (stable CRC32 tenant keys, explicit
+  tenant→host pinning overrides, cordon/restore with minimal remapping);
 * :mod:`gossip`    — per-host queue-depth digests on a configurable period;
   the SLO admission gate consumes bounded-staleness *cluster* state, and
   staleness is audited, never hidden;
@@ -17,16 +18,25 @@ clock:
   (quiesce ingress everywhere → drain every host → collect), and the same
   explicit-clock surface as a single server so ``LoadGenerator`` drives a
   cluster unchanged;
+* :mod:`failover`  — host-failure recovery: deterministic fault injection
+  (``FaultPlan``), silence-driven cordon, per-host intake journals, lossless
+  idempotent replay onto rendezvous survivors, and watermark-gated shedding
+  during the redistribution transient;
 * :mod:`telemetry` — merges K per-host JSON snapshots into cluster-level
   p50/p95/p99 (exact, via raw samples), per-host occupancy, and
   load-imbalance metrics.
 
 Cluster drains are bit-for-bit equivalent to a single-host replay of the
 same trace (``tests/test_cluster.py`` sweeps N ∈ {1, 2, 4} with mixed
-eager/lazy reduction classes).
+eager/lazy reduction classes), and so are kill/recover chaos runs
+(``tests/test_failover.py``: surviving-tenant results bit-equal, no request
+lost or double-served).
 """
 from repro.cluster.cluster import ClusterConfig, ClusterServer
+from repro.cluster.failover import (FailoverCoordinator, FaultEvent,
+                                    FaultPlan, IntakeJournal)
 from repro.cluster.gossip import ClusterView, GossipBus, HostDigest
-from repro.cluster.router import TenantHashRouter, stable_tenant_hash
+from repro.cluster.router import (TenantHashRouter, rendezvous_score,
+                                  stable_tenant_hash)
 from repro.cluster.telemetry import (MERGE_TOLERANCE_REL, load_imbalance,
-                                     merge_snapshots)
+                                     merge_snapshots, summarize_failover)

@@ -42,8 +42,9 @@ from repro.obs.alerts import AlertEngine, default_cluster_rules
 from repro.obs.export import write_chrome_trace, write_text
 from repro.obs.metrics import MetricsRegistry, expose_registries
 from repro.obs.tracing import Tracer
-from repro.serve.server import (CryptoServer, ServeConfig,
+from repro.serve.server import (CryptoServer, ResponseHandle, ServeConfig,
                                 coscheduler_from_config)
+from repro.cluster.failover import FailoverCoordinator, FaultPlan
 from repro.cluster.gossip import GossipBus
 from repro.cluster.router import TenantHashRouter
 from repro.cluster.telemetry import merge_snapshots
@@ -55,6 +56,18 @@ class ClusterConfig:
     gossip_period_s: float = 0.002
     gossip_staleness_factor: float = 2.0   # digest usable for period × factor
     pinned: dict | None = None             # tenant_id -> host overrides
+    # Deterministic fault injection: a FaultPlan (or a parseable
+    # "kill@T:hN,..." spec with times in absolute virtual-clock seconds —
+    # CLI front-ends pre-scale fraction-of-duration specs) applied on the
+    # tick edge.  None serves failure-free.
+    fault_plan: FaultPlan | str | None = None
+    # Watermark-based load shedding during a failover redistribution
+    # transient: fraction of serve.max_pending above which a tenant's owner
+    # is considered saturated — non-sticky tenants divert power-of-two to
+    # their rendezvous alternate, the rest shed with reason "shed".  None
+    # (default) never sheds.
+    shed_watermark: float | None = None
+    shed_transient_s: float | None = None  # None → 2 × staleness bound
     serve: ServeConfig = dataclasses.field(default_factory=ServeConfig)
 
 
@@ -120,6 +133,14 @@ class ClusterServer:
                 default_cluster_rules(
                     staleness_bound_s=self.gossip.staleness_bound_s),
                 tracer=self.tracer, host=None)
+        # Failure handling: fault injection, silence-driven cordon, journal
+        # replay, transient shedding (repro.cluster.failover).
+        plan = cfg.fault_plan
+        if isinstance(plan, str):
+            plan = FaultPlan.parse(plan)
+        self.failover = FailoverCoordinator(
+            self, plan, shed_watermark=cfg.shed_watermark,
+            shed_transient_s=cfg.shed_transient_s)
 
     # --- gossip wiring --------------------------------------------------------
 
@@ -134,11 +155,18 @@ class ClusterServer:
         return depth_fn
 
     def _tick(self, now: float):
-        """Run every due gossip publish (period-gated per host), then the
-        fleet-level metrics scrape + dead-host sensing on the same edge."""
+        """One fleet control edge: apply due fault-plan events, run every
+        due gossip publish (period-gated, *serving* hosts only — a killed
+        or paused host is exactly a host that stops publishing), then
+        silence-driven cordon sensing and the fleet metrics scrape."""
+        self.failover.apply_due(now)
         for h, srv in enumerate(self.hosts):
-            self.gossip.maybe_publish(h, srv.pending_load, now,
-                                      open_batches=srv.batcher.open_batches)
+            if self.failover.publishing(h):
+                if self.gossip.maybe_publish(
+                        h, srv.pending_load, now,
+                        open_batches=srv.batcher.open_batches):
+                    self.failover.journals[h].compact()
+        self.failover.sense(now)
         if self.metrics is not None and self.metrics.maybe_scrape(now):
             self.alerts.evaluate(now)
 
@@ -160,6 +188,17 @@ class ClusterServer:
                    "Oldest digest any decision actually consumed.")
         m.describe("repro_cluster_queue_rows", "gauge",
                    "Fleet pending load (sum of per-host pending_load).")
+        m.describe("repro_cluster_ingress_total", "counter",
+                   "Requests tagged at cluster ingress (failover rids).")
+        m.describe("repro_cluster_sheds_total", "counter",
+                   "Requests shed during a failover redistribution "
+                   "transient (burn-rate numerator for failover_shed).")
+        m.describe("repro_cluster_replayed_total", "counter",
+                   "Journal entries replayed onto survivors after a cordon.")
+        m.describe("repro_cluster_live_hosts", "gauge",
+                   "Hosts currently in the rendezvous live set.")
+        m.describe("repro_cluster_limbo_requests", "gauge",
+                   "Requests parked for a dead-but-uncordoned owner.")
 
     def _metrics_samples(self, now: float):
         bus = self.gossip
@@ -171,6 +210,11 @@ class ClusterServer:
              bus._used_staleness_max),
             ("repro_cluster_queue_rows", (),
              sum(srv.pending_load for srv in self.hosts)),
+            ("repro_cluster_ingress_total", (), self.failover.ingress),
+            ("repro_cluster_sheds_total", (), self.failover.sheds),
+            ("repro_cluster_replayed_total", (), self.failover.replayed),
+            ("repro_cluster_live_hosts", (), len(self.router.live_hosts)),
+            ("repro_cluster_limbo_requests", (), len(self.failover.limbo)),
         ]
         silence = bus.silence_s(now)
         if silence:
@@ -202,67 +246,144 @@ class ClusterServer:
     def submit(self, req, now: float | None = None):
         now = time.monotonic() if now is None else now
         self._tick(now)
-        host = self.router.host_for(req.tenant_id)
-        self._submissions[host] += 1
-        return self.hosts[host].submit(req, now=now)
+        self.failover.tag(req)
+        return self._submit_routed(req, now)
+
+    def _submit_routed(self, req, now: float,
+                       handle: ResponseHandle | None = None):
+        """Route one tagged request through the failover coordinator and
+        land it: on its owner host (journaled when admitted), in the limbo
+        retry queue (owner dead, cordon pending), or shed.  ``handle``
+        threads an existing caller handle through a limbo re-delivery."""
+        kind, host, decision = self.failover.route(req, now)
+        if kind == "host":
+            self._submissions[host] += 1
+            h = self.hosts[host].submit(req, now=now, handle=handle)
+            if not h.rejected:
+                self.failover.journals[host].record(
+                    rid=req.request_id, tenant_id=req.tenant_id,
+                    request=req, handle=h, reason="ok", recorded_at=now)
+            return h
+        if handle is None:
+            handle = ResponseHandle(req, submitted_at=now)
+        if kind == "limbo":
+            self.failover.hold_limbo(host, req, handle)
+        else:  # shed
+            handle._reject(decision, at=now)
+            self.failover.note_shed(host, req, now)
+        return handle
 
     def submit_many(self, reqs, now: float | None = None, nows=None):
-        """Batch ingress: shard one arrival batch by the tenant-hash router
+        """Batch ingress: shard one arrival batch by the rendezvous router
         and feed each host's share through its vectorised ``submit_many``
         edge (arrival order preserved within a host; handles returned in the
-        original batch order)."""
+        original batch order).  Requests routed to limbo or shed by the
+        failover coordinator are pulled out of the batch individually."""
         now = time.monotonic() if now is None else now
         if nows is None:
             nows = [now] * len(reqs)
         self._tick(float(nows[0]) if len(reqs) else now)
         shard_pos: dict[int, list[int]] = {}
-        for p, req in enumerate(reqs):
-            host = self.router.host_for(req.tenant_id)
-            shard_pos.setdefault(host, []).append(p)
         handles = [None] * len(reqs)
+        for p, req in enumerate(reqs):
+            self.failover.tag(req)
+            kind, host, decision = self.failover.route(req, float(nows[p]))
+            if kind == "host":
+                shard_pos.setdefault(host, []).append(p)
+                continue
+            t = float(nows[p])
+            handle = ResponseHandle(req, submitted_at=t)
+            if kind == "limbo":
+                self.failover.hold_limbo(host, req, handle)
+            else:
+                handle._reject(decision, at=t)
+                self.failover.note_shed(host, req, t)
+            handles[p] = handle
         for host, positions in shard_pos.items():
             self._submissions[host] += len(positions)
             hs = self.hosts[host].submit_many(
                 [reqs[p] for p in positions],
                 nows=[nows[p] for p in positions])
+            journal = self.failover.journals[host]
             for p, h in zip(positions, hs):
                 handles[p] = h
+                if not h.rejected:
+                    journal.record(
+                        rid=reqs[p].request_id, tenant_id=reqs[p].tenant_id,
+                        request=reqs[p], handle=h, reason="ok",
+                        recorded_at=float(nows[p]))
         return handles
 
     def pump(self, now: float | None = None) -> int:
         now = time.monotonic() if now is None else now
         self._tick(now)
-        return sum(srv.pump(now) for srv in self.hosts)
+        return sum(srv.pump(now) for h, srv in enumerate(self.hosts)
+                   if self.failover.serving(h))
 
     def next_deadline(self) -> float | None:
-        deadlines = [d for srv in self.hosts
-                     if (d := srv.next_deadline()) is not None]
+        # A dead host's deadlines are unreachable until it recovers — the
+        # pump loop must not spin on them (its queued work is replayed or
+        # recovered at cordon).
+        deadlines = [d for h, srv in enumerate(self.hosts)
+                     if self.failover.serving(h)
+                     and (d := srv.next_deadline()) is not None]
         return min(deadlines) if deadlines else None
 
     @property
     def under_backpressure(self) -> bool:
-        return any(srv.under_backpressure for srv in self.hosts)
+        return any(srv.under_backpressure
+                   for h, srv in enumerate(self.hosts)
+                   if self.failover.serving(h))
 
     def drain(self, now: float | None = None) -> int:
-        """Distributed two-phase drain barrier (see module docstring)."""
+        """Distributed two-phase drain barrier (see module docstring).
+
+        Failure-aware: fault-plan events scripted *before* the drain
+        instant apply pre-barrier (and any dead host is force-cordoned —
+        the barrier's flush RPC fails fast, a stronger signal than gossip
+        silence); an event scripted at exactly the drain instant lands
+        *mid*-barrier, between quiesce and flush, and its journal is
+        replayed onto the (already-draining) survivors so the barrier
+        still completes with every admitted request resolved."""
         now = time.monotonic() if now is None else now
+        fo = self.failover
+        # Pre-barrier tick: strictly-earlier fault events, gossip, sensing.
+        fo.apply_due(now, inclusive=False)
+        for h, srv in enumerate(self.hosts):
+            if fo.publishing(h):
+                self.gossip.maybe_publish(
+                    h, srv.pending_load, now,
+                    open_batches=srv.batcher.open_batches)
+        fo.sense(now)
+        fo.cordon_dead(now)
         if self.tracer is not None:
             self.tracer.emit("B", "drain_barrier", now, track="cluster",
                              args={"hosts": len(self.hosts)})
-        # Phase 1 — quiesce: fleet-wide ingress stop before any flush.
-        for srv in self.hosts:
-            srv.quiesce(now)
+        # Phase 1 — quiesce: fleet-wide ingress stop before any flush
+        # (paused hosts are reachable on the data plane and quiesce too).
+        for h, srv in enumerate(self.hosts):
+            if fo.serving(h):
+                srv.quiesce(now)
         self._barrier = {"quiesced_at": now,
                          "hosts": len(self.hosts),
                          "complete": False}
-        # Phase 2 — drain: flush every host's open batches, holdback pens,
-        # and launch rings (depth-k flights are retired inside srv.drain).
-        flushed = sum(srv.drain(now) for srv in self.hosts)
+        # Mid-barrier seam: a kill scripted at the drain instant fires
+        # here, after quiesce — its journal replays onto survivors whose
+        # ingress is already stopped (replay_admitted bypasses draining).
+        fo.apply_due(now)
+        fo.cordon_dead(now, cause="drain_probe")
+        # Phase 2 — drain: flush every live host's open batches, holdback
+        # pens, and launch rings (depth-k flights retired inside srv.drain).
+        flushed = sum(srv.drain(now) for h, srv in enumerate(self.hosts)
+                      if fo.serving(h))
         # Phase 3 — collect: the barrier record lands in telemetry.  The
         # in-flight census is the ring-drain audit — a complete barrier must
-        # leave zero launch groups outstanding on any host.
+        # leave zero launch groups outstanding on any host (a reset dead
+        # host holds none by construction).
         self._barrier.update(
             drained_at=now, batches_flushed=flushed,
+            serving_hosts=sum(1 for h in range(len(self.hosts))
+                              if fo.serving(h)),
             inflight_groups=sum(srv.inflight_groups for srv in self.hosts),
             complete=True)
         if self.tracer is not None:
@@ -303,7 +424,9 @@ class ClusterServer:
             "routing": {
                 "per_host_submissions": list(self._submissions),
                 "pinned_tenants": len(self.router.pinned),
+                "live_hosts": list(self.router.live_hosts),
             },
+            "failover": self.failover.snapshot(),
             "drain_barrier": self._barrier,
         }
         if self.metrics is not None:

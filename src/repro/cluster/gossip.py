@@ -73,6 +73,7 @@ class GossipBus:
         self.views = 0
         self.stale_drops = 0
         self.pruned_digests = 0
+        self.revives = 0    # publishes by a host whose digest had been pruned
         self._used_staleness_max = 0.0
         self._used_staleness_sum = 0.0
         self._used_staleness_n = 0
@@ -90,6 +91,10 @@ class GossipBus:
 
     def publish(self, host_id: int, queue_depth: int, now: float,
                 open_batches: int = 0):
+        if host_id in self._last_pub and host_id not in self._digests:
+            # A host that had been pruned as dead is publishing again — the
+            # rejoin audit the failover recover path asserts on.
+            self.revives += 1
         self._digests[host_id] = HostDigest(
             host_id=host_id, queue_depth=int(queue_depth),
             open_batches=int(open_batches), published_at=now)
@@ -150,8 +155,15 @@ class GossipBus:
         """Per-host publish silence: ``now - last publish`` for every host
         that has ever published.  The dead-host sensing signal — a host
         whose silence exceeds ``staleness_bound_s`` has no usable digest
-        anywhere in the fleet (the ROADMAP host-failure follow-on's
-        detection half; re-route/replay build on this)."""
+        anywhere in the fleet; the failover coordinator cordons on exactly
+        this threshold.
+
+        Contract with ``cluster_view``'s pruning: pruning removes a dead
+        host's *digest* (``_digests``) only, never its ``_last_pub`` entry,
+        so silence keeps growing after the prune and the ``gossip_silence``
+        alert stays firing until an actual republish — a cordoned host must
+        not read as healthy just because its stale digest was garbage-
+        collected (regression-tested in tests/test_metrics_alerts.py)."""
         return {hid: max(0.0, now - last)
                 for hid, last in self._last_pub.items()}
 
@@ -166,6 +178,7 @@ class GossipBus:
             "views": self.views,
             "stale_drops": self.stale_drops,
             "pruned_digests": self.pruned_digests,
+            "revives": self.revives,
             "used_staleness_max_s": self._used_staleness_max,
             "used_staleness_mean_s": (self._used_staleness_sum / n) if n
                                      else 0.0,

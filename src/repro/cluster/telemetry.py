@@ -262,6 +262,33 @@ def load_imbalance(per_host_requests: list[int]) -> dict:
     }
 
 
+def summarize_failover(events: list[dict]) -> dict:
+    """Roll a failover coordinator's event log up into fleet counts: fault
+    injections by kind, cordons by cause, and the recovery-side aggregates
+    (replayed / recovered / deduped / limbo-delivered) summed over cordon
+    events.  The summary is what lands in ``snapshot()["failover"]`` — the
+    raw event list rides alongside for forensics."""
+    out = {"kills": 0, "pauses": 0, "recovers": 0, "cordons": 0,
+           "cordons_by_cause": {}, "replayed": 0, "recovered": 0,
+           "deduped": 0, "limbo_delivered": 0}
+    for ev in events:
+        kind = ev.get("kind")
+        if kind == "kill":
+            out["kills"] += 1
+        elif kind == "pause":
+            out["pauses"] += 1
+        elif kind == "recover":
+            out["recovers"] += 1
+        elif kind == "cordon":
+            out["cordons"] += 1
+            cause = ev.get("cause", "unknown")
+            out["cordons_by_cause"][cause] = (
+                out["cordons_by_cause"].get(cause, 0) + 1)
+            for k in ("replayed", "recovered", "deduped", "limbo_delivered"):
+                out[k] += ev.get(k, 0)
+    return out
+
+
 def merge_snapshots(snaps: list[dict]) -> dict:
     """Merge K per-host telemetry snapshots into one cluster snapshot.
 

@@ -182,16 +182,28 @@ def serve_crypto_cluster(*, hosts=2, duration_s=0.05, rate_hz=2048, n_c=8,
                          metrics_out=None, metrics_period_s=0.005,
                          deterministic_timing=False,
                          realtime=False, coscheduler_factory=None,
-                         arrival_batch=None, columnar_admission=True):
+                         arrival_batch=None, columnar_admission=True,
+                         fault_plan=None, shed_watermark=None):
     """Closed loop over an N-host sharded cluster: tenant-hash ingress →
     per-host admission (gossip-informed SLO gate) → per-host continuous
     batcher → co-scheduled dispatch → two-phase drain barrier → merged
     telemetry.  ``trace`` overrides the Poisson trace (benchmarks pass
     skewed tenant distributions); ``trace_out`` switches request-lifecycle
-    tracing on and writes the merged fleet Chrome-trace JSON there."""
-    from repro.cluster import ClusterConfig, ClusterServer
+    tracing on and writes the merged fleet Chrome-trace JSON there.
+
+    ``fault_plan`` injects deterministic host failures: a
+    ``"kill@T:hN,recover@T:hN,pause@T:hN"`` spec (string times are
+    *fractions of the run duration* — ``kill@0.5:h1`` kills host 1 mid-run
+    — and are scaled here) or a pre-built :class:`repro.cluster.FaultPlan`
+    with absolute virtual-clock times.  ``shed_watermark`` arms
+    watermark-gated load shedding during failover redistribution
+    transients (fraction of ``max_pending``)."""
+    from repro.cluster import ClusterConfig, ClusterServer, FaultPlan
     from repro.core.scheduler import PoissonTrace
     from repro.serve import LoadGenerator, ServeConfig
+
+    if isinstance(fault_plan, str):
+        fault_plan = FaultPlan.parse(fault_plan).scaled(duration_s)
 
     serve_cfg = ServeConfig(
         n_c=n_c, max_age_s=max_age_s, validate=validate, accum=accum,
@@ -212,7 +224,8 @@ def serve_crypto_cluster(*, hosts=2, duration_s=0.05, rate_hz=2048, n_c=8,
     cluster = ClusterServer(
         ClusterConfig(n_hosts=hosts, gossip_period_s=gossip_period_s,
                       gossip_staleness_factor=gossip_staleness_factor,
-                      pinned=pinned, serve=serve_cfg),
+                      pinned=pinned, fault_plan=fault_plan,
+                      shed_watermark=shed_watermark, serve=serve_cfg),
         coscheduler_factory=coscheduler_factory)
     gen = LoadGenerator(
         trace if trace is not None else
@@ -248,6 +261,16 @@ def main():
                          "distributed drain barrier)")
     ap.add_argument("--gossip-period-ms", type=float, default=2.0,
                     help="queue-depth digest exchange period (cluster mode)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="deterministic host-failure injection (cluster "
+                         "mode): comma-separated kill@T:hN / pause@T:hN / "
+                         "recover@T:hN events, T a fraction of the run "
+                         "duration — e.g. 'kill@0.5:h1,recover@0.9:h1'")
+    ap.add_argument("--shed-watermark", type=float, default=None,
+                    help="arm watermark load shedding during failover "
+                         "transients: fraction of max-pending above which "
+                         "non-sticky tenants divert (power-of-two) and "
+                         "sticky ones shed")
     ap.add_argument("--tenant-rate", type=float, default=None,
                     help="per-tenant token-bucket rate (req/s)")
     ap.add_argument("--slo-ms", type=float, default=None,
@@ -354,7 +377,8 @@ def main():
             metrics_period_s=args.metrics_period_ms / 1e3,
             deterministic_timing=args.deterministic_timing,
             realtime=args.realtime, arrival_batch=args.arrival_batch,
-            columnar_admission=not args.scalar_admission)
+            columnar_admission=not args.scalar_admission,
+            fault_plan=args.fault_plan, shed_watermark=args.shed_watermark)
         m = snap["merged"]
         served = sum(1 for h in load.handles if h.done() and not h.rejected)
         print(f"cluster[{args.hosts} hosts]: served {served}/"
@@ -380,6 +404,15 @@ def main():
               f"{bar['batches_flushed']} batches flushed, "
               f"complete={bar['complete']}, "
               f"in-flight={bar['inflight_groups']}")
+        if args.fault_plan or args.shed_watermark is not None:
+            fo = snap["failover"]
+            s = fo["summary"]
+            print(f"failover: {s['kills']} kills / {s['pauses']} pauses / "
+                  f"{s['recovers']} recovers → {s['cordons']} cordons; "
+                  f"requests replayed={fo['replayed']} "
+                  f"recovered={fo['recovered']} deduped={fo['deduped']} "
+                  f"shed={fo['sheds']} diverted={fo['diverted']} "
+                  f"lost={fo['lost']} (must be 0)")
         if args.controller:
             ctl, hb = m["controller"], m["holdback"]
             print(f"controller[{ctl['hosts']} hosts]: {ctl['updates']} "

@@ -250,9 +250,14 @@ def default_serve_rules(*, max_age_s: float, slo_deadline_s: float | None = None
     )
 
 
-def default_cluster_rules(*, staleness_bound_s: float):
-    """Fleet-level sensing: a silent host is a dead host (ROADMAP PR 3
-    follow-on — this is the *detection* half; re-route/replay stay open)."""
+def default_cluster_rules(*, staleness_bound_s: float,
+                          shed_budget: float = 0.05):
+    """Fleet-level rules: a silent host is a dead host (detection — the
+    failover coordinator cordons on the same signal), plus the recovery
+    side: ``failover_shed`` burns when the redistribution transient sheds
+    more than ``shed_budget`` of cluster ingress (both counters come from
+    the coordinator; absent series — no failover layer — keep it inactive).
+    """
     bound = float(staleness_bound_s)
     return (
         ThresholdRule(
@@ -264,6 +269,13 @@ def default_cluster_rules(*, staleness_bound_s: float):
             name="gossip_staleness",
             series=("repro_gossip_used_staleness_seconds_max", ()),
             op=">", value=0.8 * bound, for_s=0.0, severity="ticket",
+        ),
+        BurnRateRule(
+            name="failover_shed",
+            num=("repro_cluster_sheds_total", ()),
+            den=("repro_cluster_ingress_total", ()),
+            budget=shed_budget,
+            windows=((8.0 * bound, 2.0 * bound, 2.0),),
         ),
     )
 

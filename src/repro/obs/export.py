@@ -24,10 +24,10 @@ import gzip
 import json
 
 # Stable thread ordering inside each host process: lifecycle first, then the
-# device/dispatch tracks, counters and alerts last.  Unknown tracks sort
-# after these.
+# device/dispatch tracks, cluster control (drain barrier, failover spans),
+# counters and alerts last.  Unknown tracks sort after these.
 _TRACK_ORDER = ("serve", "batcher", "holdback", "device", "cluster",
-                "counters", "alerts")
+                "failover", "counters", "alerts")
 
 
 def open_text(path: str, mode: str = "rt"):

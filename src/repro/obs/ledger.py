@@ -136,6 +136,20 @@ class PenaltyLedger:
         c["spatial_pad"] += spatial_pad
         c["host_gap"] += host_gap
 
+    def observe_host_gap(self, workload: str, gap_s: float):
+        """Attribute measured non-device seconds straight into the
+        ``host_gap`` bin of ``workload`` — no launch involved.  The
+        failover path uses this to price a failure transient (the gossip
+        detection window during which a dead host's intake sat unserved)
+        onto the recovery coordinator's ledger, under a ``failover:hN``
+        pseudo-workload.  Conservation holds trivially: the bin *is* the
+        workload's whole cycle total."""
+        w = self._w.setdefault(workload, {
+            "launches": 0, "batches": 0, "live_rows": 0, "launched_rows": 0,
+            "reduction_modes": {},
+            "cycles": {k: 0.0 for k in SHARE_KEYS}})
+        w["cycles"]["host_gap"] += max(0.0, float(gap_s)) * DEVICE_HZ
+
     def snapshot(self) -> dict:
         """Per-workload cycle bins + shares (the ``penalty`` section)."""
         out = {}

@@ -12,7 +12,11 @@ against the protocol the serving stack emits:
   a terminal ``e`` AND chains submit → batch → launch — its rid appears in
   the ``args.rids`` roster of a closed batch span, and that batch id
   appears in a ``launch_batches`` instant naming a launch span.  Rejected
-  requests appear only as ``reject`` instants and need no chain.
+  requests appear only as ``reject`` instants and need no chain.  One
+  exemption: requests abandoned by a host failure (their span ends with a
+  ``failover`` event and their rid is listed in a ``failover_abandoned``
+  instant) must still balance but carry no chain — the replayed request
+  opens a fresh span on the surviving host, and *that* span chains.
 
 Violations raise ``ValueError`` with the offending id; success returns a
 stats dict (span/chain counts) the smoke tests assert on.
@@ -57,6 +61,7 @@ def validate_chrome_trace(trace) -> dict:
     enq: dict = {}         # rid -> set of bids (from batch-close rosters)
     launch_of: dict = {}   # bid -> lid (from launch_batches instants)
     requests: set = set()
+    abandoned: set = set() # rids closed by host failure (replayed elsewhere)
     rejects = 0
 
     for i, ev in enumerate(events):
@@ -109,6 +114,8 @@ def validate_chrome_trace(trace) -> dict:
                     launch_of[bid] = args["lid"]
             elif ev["name"] == "reject":
                 rejects += 1
+            elif ev["name"] == "failover_abandoned":
+                abandoned.update(args.get("rids", ()))
         elif ph == "C":
             if "value" not in ev.get("args", {}):
                 raise ValueError(f"counter event {i} missing args.value")
@@ -127,6 +134,8 @@ def validate_chrome_trace(trace) -> dict:
         rec = spans[("request", rid)]
         if rec["e"] < rec["b"]:
             raise ValueError(f"request {rid} never completed")
+        if rid in abandoned:
+            continue       # chain continues on the survivor's replay span
         bids = enq.get(rid)
         if not bids:
             raise ValueError(f"request {rid} has no enqueue link to a batch "

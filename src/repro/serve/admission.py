@@ -78,15 +78,19 @@ class TokenBucket:
 class AdmissionDecision:
     admitted: bool
     reason: str              # "ok" | "queue_full" | "rate_limited" |
-                             # "slo_miss" | "cluster_slo_miss"
+                             # "slo_miss" | "cluster_slo_miss" | "shed"
     retry_after_s: float = 0.0
 
 
 ADMIT = AdmissionDecision(True, "ok")
 
 # Machine-readable reason codes for the columnar batch path (uint8 lanes).
-OK, QUEUE_FULL, SLO_MISS, CLUSTER_SLO_MISS, RATE_LIMITED = range(5)
-REASONS = ("ok", "queue_full", "slo_miss", "cluster_slo_miss", "rate_limited")
+# SHED is issued by the cluster's failover coordinator (watermark-gated load
+# shedding during a redistribution transient), never by this controller —
+# it lives here so reason codes stay one authoritative enumeration.
+OK, QUEUE_FULL, SLO_MISS, CLUSTER_SLO_MISS, RATE_LIMITED, SHED = range(6)
+REASONS = ("ok", "queue_full", "slo_miss", "cluster_slo_miss",
+           "rate_limited", "shed")
 
 
 @dataclasses.dataclass

@@ -307,11 +307,7 @@ class CryptoServer:
         # With a row ladder the batcher emits mergeable (live-row) operands
         # and the co-scheduler pads once, on the merged operand — padding to
         # N_c here as well would interleave dead rows into super-batches.
-        self.batcher = ContinuousBatcher(
-            n_c=cfg.n_c, bucket_granularity=cfg.bucket_granularity,
-            max_age_s=cfg.max_age_s, occupancy_close=cfg.occupancy_close,
-            pad_rows=cfg.pad_rows and self.cos.row_ladder is None,
-            controller=self.controller, tracer=self.tracer)
+        self.batcher = self._make_batcher()
         self.admission = AdmissionController(
             max_pending=cfg.max_pending, tenant_rate_hz=cfg.tenant_rate_hz,
             tenant_burst=cfg.tenant_burst, slo_deadline_s=cfg.slo_deadline_s,
@@ -364,6 +360,11 @@ class CryptoServer:
         # completion (a long-lived server must not accumulate history), and
         # correct when one tenant has several rows in flight.
         self._handles: dict[int, ResponseHandle] = {}
+        # Fleet-assigned request ids ever admitted here — the exactly-once
+        # dedup filter for failover replay: a journal entry delivered twice
+        # (or re-delivered to a rebooted host) is rejected as a duplicate.
+        # Deliberately durable across reset_after_failure, like the journal.
+        self._seen_rids: set = set()
         self._ledger_profiles: dict[tuple, dict] = {}
         self._req_span_names: dict[str, str] = {}
         self._validated: set[tuple] = set()
@@ -383,14 +384,31 @@ class CryptoServer:
                     "be reused")
             self.warm_traces = self.cos.precompile(cfg.warm_start, cfg.n_c)
 
+    def _make_batcher(self) -> ContinuousBatcher:
+        """Construct the continuous batcher from the config — used at boot
+        and by ``reset_after_failure`` (a rebooted host gets a fresh one)."""
+        cfg = self.config
+        return ContinuousBatcher(
+            n_c=cfg.n_c, bucket_granularity=cfg.bucket_granularity,
+            max_age_s=cfg.max_age_s, occupancy_close=cfg.occupancy_close,
+            pad_rows=cfg.pad_rows and self.cos.row_ladder is None,
+            controller=self.controller, tracer=self.tracer)
+
     # --- ingress --------------------------------------------------------------
 
-    def submit(self, req, now: float | None = None) -> ResponseHandle:
+    def submit(self, req, now: float | None = None, *,
+               handle: ResponseHandle | None = None) -> ResponseHandle:
         now = time.monotonic() if now is None else now
-        handle = ResponseHandle(req, submitted_at=now)
+        # ``handle`` lets the cluster's failover path re-deliver a request
+        # that already has a caller-held handle (limbo retry) — the decision
+        # resolves/rejects that handle instead of allocating a second one.
+        if handle is None:
+            handle = ResponseHandle(req, submitted_at=now)
+        rid = getattr(req, "request_id", None)
         if self._draining:
             decision = AdmissionDecision(False, "draining")
-        elif id(req) in self._handles:
+        elif id(req) in self._handles or (rid is not None
+                                          and rid in self._seen_rids):
             decision = AdmissionDecision(False, "duplicate")
         else:
             # Only consult gossip when the SLO gate can act on it — the view
@@ -416,8 +434,8 @@ class CryptoServer:
             # The request span opens at submit and closes at completion; the
             # causal ID rides on the request object so the batcher can link
             # it to the batch it lands in.
-            rid = tr.next_id()
-            req.trace_id = rid
+            tid = tr.next_id()
+            req.trace_id = tid
             # Name carries the workload, the batch span carries the d
             # bucket, the span length is the latency — no per-request args
             # dict or f-string (this is the hottest emitter in the stack).
@@ -425,7 +443,9 @@ class CryptoServer:
             if name is None:
                 name = self._req_span_names.setdefault(
                     req.workload, "req:" + req.workload)
-            tr.begin("request", rid, name, now)
+            tr.begin("request", tid, name, now)
+        if rid is not None:
+            self._seen_rids.add(rid)
         self._handles[id(req)] = handle
         self._dispatch(self.batcher.add(req, now), now)
         return handle
@@ -467,13 +487,18 @@ class CryptoServer:
                 h._reject(d, at=float(t))
             self.telemetry.record_admissions({"draining": len(reqs)})
             return handles
-        live_pos, dup_pos, seen = [], [], set()
+        live_pos, dup_pos, seen, seen_rids = [], [], set(), set()
         for p, r in enumerate(reqs):
-            rid = id(r)
-            if rid in self._handles or rid in seen:
+            oid = id(r)
+            rid = getattr(r, "request_id", None)
+            if (oid in self._handles or oid in seen
+                    or (rid is not None and (rid in self._seen_rids
+                                             or rid in seen_rids))):
                 dup_pos.append(p)
             else:
-                seen.add(rid)
+                seen.add(oid)
+                if rid is not None:
+                    seen_rids.add(rid)
                 live_pos.append(p)
         if dup_pos:
             d = AdmissionDecision(False, "duplicate")
@@ -510,13 +535,16 @@ class CryptoServer:
                 handles[p]._reject(d, at=t)
                 continue
             if tr is not None:
-                rid = tr.next_id()
-                req.trace_id = rid
+                tid = tr.next_id()
+                req.trace_id = tid
                 name = self._req_span_names.get(req.workload)
                 if name is None:
                     name = self._req_span_names.setdefault(
                         req.workload, "req:" + req.workload)
-                tr.begin("request", rid, name, t)
+                tr.begin("request", tid, name, t)
+            rid = getattr(req, "request_id", None)
+            if rid is not None:
+                self._seen_rids.add(rid)
             self._handles[id(req)] = handles[p]
             closed.extend(self.batcher.add(req, t))
         self._dispatch(closed, float(nows_arr[-1]))
@@ -590,6 +618,84 @@ class CryptoServer:
         closed = self.batcher.flush(now)
         self._dispatch(closed, now, final=True)
         return len(closed)
+
+    # --- failover (repro.cluster.failover drives these) -----------------------
+
+    def recover_inflight(self, now: float) -> int:
+        """Gather-ring rescue after a host death: force-gather every launch
+        group still on the ring, in launch order, resolving their handles.
+        The device had already computed these results when the host process
+        died — recovering them beats replaying the rows, and the journal
+        then sees their entries as settled.  Returns handles resolved."""
+        before = len(self._handles)
+        while (ring := self._oldest_ring()) is not None:
+            self._finish(*ring.popleft()[1:], now)
+        return before - len(self._handles)
+
+    def reset_after_failure(self, now: float):
+        """Model the reboot of a killed host: every in-memory structure
+        (open batches, staged sets, rings, holdback pen, handle table) is
+        gone; the rid-dedup filter, telemetry, and admission state survive
+        — they live with the journal, not in host RAM, and a crashed host
+        must never hand a tenant fresh token budget.  Dangling request
+        trace spans are closed with a ``failover`` end and advertised in a
+        ``failover_abandoned`` instant so the trace validator knows their
+        causal chain continues on the survivor's replay span."""
+        tr = self.tracer
+        if tr is not None:
+            # Close the open-batch spans the dead batcher holds (their rows
+            # are the abandoned requests; the discarded ClosedBatch results
+            # never dispatch), then the dangling request spans themselves.
+            self.batcher.flush(now)
+            rids = []
+            for handle in self._handles.values():
+                tid = getattr(handle.request, "trace_id", None)
+                if tid is not None:
+                    tr.end("request", tid, "failover", now)
+                    rids.append(tid)
+            if rids:
+                tr.instant("failover_abandoned", now, track="failover",
+                           args={"rids": rids})
+        self._handles.clear()
+        self._staged.clear()
+        self._rings.clear()
+        self._held.clear()
+        self.batcher = self._make_batcher()
+        self._draining = False
+
+    def replay_admitted(self, entries, now: float) -> tuple[int, int]:
+        """Failover replay edge: re-enter requests a dead peer had already
+        admitted.  ``entries`` is ``[(request, handle), ...]`` from that
+        peer's intake journal.  Admission is bypassed entirely — the
+        requests were admitted and charged once, on the failed host
+        (tests/test_ingress_columnar.py pins that bucket levels stay
+        bit-identical) — and the draining gate is ignored: the drain
+        barrier's contract is *complete everything admitted*, which
+        includes rows stranded by a mid-barrier kill.  Idempotent: entries
+        whose handle already resolved, or whose request id this host has
+        seen, are skipped.  Returns ``(replayed, deduped)``."""
+        tr = self.tracer
+        closed: list[ClosedBatch] = []
+        replayed = deduped = 0
+        for req, handle in entries:
+            rid = getattr(req, "request_id", None)
+            if (handle.done() or id(req) in self._handles
+                    or (rid is not None and rid in self._seen_rids)):
+                deduped += 1
+                continue
+            if rid is not None:
+                self._seen_rids.add(rid)
+            self.telemetry.record_admission("replayed")
+            if tr is not None:
+                tid = tr.next_id()
+                req.trace_id = tid
+                tr.begin("request", tid, "replay:" + req.workload, now)
+            self._handles[id(req)] = handle
+            closed.extend(self.batcher.add(req, now))
+            replayed += 1
+        if replayed:
+            self._dispatch(closed, now)
+        return replayed, deduped
 
     # --- dispatch -------------------------------------------------------------
 

@@ -1,0 +1,442 @@
+"""Host-failure recovery: fault injection, rendezvous failover, replay.
+
+The chaos contract under test: kill one of N hosts mid-run and the fleet
+(a) loses no admitted request and double-serves none (exactly-once via
+journal replay + rid dedup), (b) remaps only the dead host's tenants
+(rendezvous hashing), and (c) produces per-tenant results bit-for-bit
+equal to the no-failure replay of the same trace.  Everything runs on the
+deterministic virtual clock — a FaultPlan applied on tick edges makes
+chaos runs exactly reproducible.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterConfig, ClusterServer, FaultEvent,
+                           FaultPlan, IntakeJournal, TenantHashRouter,
+                           rendezvous_score, stable_tenant_hash,
+                           summarize_failover)
+from repro.core import field as F
+from repro.core import workloads as WK
+from repro.core.scheduler import TenantRequest
+from repro.core.scheduler.coscheduler import SliceCoScheduler
+from repro.launch.serve import serve_crypto_cluster
+from repro.obs.validate import validate_chrome_trace
+from repro.serve import CryptoServer, ServeConfig
+
+RNG = np.random.default_rng(41)
+
+# One co-scheduler shared by every cluster in this module (and both sides
+# of each chaos-parity pair): compiled per-(workload, d_bucket) programs
+# are what hosts reuse, and sharing avoids recompiling per host count.
+CLUSTER_COS = SliceCoScheduler(accum="int32_native", d_tile=171,
+                               reduction_by_workload={"dilithium": "lazy"})
+
+CHAOS_KW = dict(duration_s=0.02, rate_hz=4096, seed=7, d_uniform=256,
+                accum="int32_native", validate=False, n_c=8,
+                max_age_s=0.002, d_tile=171,
+                reduction_by_workload={"dilithium": "lazy"})
+# Fractions of the run: kill h1 at 0.35 (7 ms), recover at 0.85 (17 ms).
+# Silence crosses the 4 ms staleness bound ~11 ms in, so the fleet cordons
+# via gossip_silence well before the recover and the firing alert has a
+# full metrics period to be scraped.
+CHAOS_PLAN = "kill@0.35:h1,recover@0.85:h1"
+
+
+def _dil_request(tid, d, t=0.0):
+    coeffs = np.asarray(RNG.integers(0, F.DILITHIUM_Q, d, dtype=np.uint64),
+                        np.uint32)
+    return TenantRequest(tid, "dilithium", d, t, coeffs)
+
+
+def _tenant_on_host(router, host, start=0, skip=()):
+    for tid in range(start, start + 100_000):
+        if router.host_for(tid) == host and tid not in skip:
+            return tid
+    raise AssertionError(f"no tenant routes to host {host} "
+                         f"(cordoned? live={router.live_hosts})")
+
+
+# --- fault plans ---------------------------------------------------------------
+
+def test_fault_plan_parse_scale_describe_roundtrip():
+    plan = FaultPlan.parse("kill@0.5:h1, recover@0.9:h1,pause@0.25:h0")
+    assert plan.describe() == "pause@0.25:h0,kill@0.5:h1,recover@0.9:h1"
+    assert len(plan) == 3 and plan.remaining == 3
+    abs_plan = plan.scaled(0.02)
+    assert [e.t for e in abs_plan.events] == pytest.approx(
+        [0.005, 0.01, 0.018])
+    assert [e.kind for e in abs_plan.events] == ["pause", "kill", "recover"]
+    with pytest.raises(ValueError):
+        plan.scaled(0.0)
+    for bad in ("kill@0.5", "reboot@0.5:h1", "kill@0.5:1", "kill@-1:h0"):
+        with pytest.raises(ValueError):
+            FaultPlan.parse(bad)
+    with pytest.raises(ValueError):
+        FaultEvent(t=0.1, kind="explode", host=0)
+    with pytest.raises(ValueError):
+        FaultEvent(t=-0.1, kind="kill", host=0)
+    with pytest.raises(ValueError):
+        FaultEvent(t=0.1, kind="kill", host=-1)
+    with pytest.raises(TypeError):
+        FaultPlan(["kill@0.5:h1"])
+
+
+def test_fault_plan_due_is_consumed_once_and_ordered():
+    plan = FaultPlan([FaultEvent(0.01, "kill", 1),
+                      FaultEvent(0.018, "recover", 1)])
+    assert plan.due(0.005) == []
+    ev = plan.due(0.01)
+    assert [e.kind for e in ev] == ["kill"] and plan.remaining == 1
+    # already-popped events never reappear; exclusive form skips t == now
+    assert plan.due(0.01) == []
+    assert plan.due(0.018, inclusive=False) == []
+    assert [e.kind for e in plan.due(0.018)] == ["recover"]
+    assert plan.remaining == 0
+    # same-instant events keep author order (kill scripted first applies first)
+    same = FaultPlan([FaultEvent(0.01, "kill", 0),
+                      FaultEvent(0.01, "recover", 0)])
+    assert [e.kind for e in same.due(0.01)] == ["kill", "recover"]
+
+
+# --- rendezvous router ---------------------------------------------------------
+
+def test_rendezvous_minimal_migration_and_restore():
+    """Cordoning one host remaps *only* its tenants; restore is the exact
+    inverse.  Property-checked over host counts and a mixed tenant id set."""
+    tenants = list(range(300)) + [f"tenant-{i}" for i in range(50)]
+    for n in (2, 3, 4, 6):
+        r = TenantHashRouter(n)
+        before = {t: r.host_for(t) for t in tenants}
+        for dead in (0, n - 1):
+            second = {t: r.choices(t, 2)[1] for t in tenants
+                      if before[t] == dead}
+            assert r.cordon(dead)
+            assert not r.cordon(dead)                    # idempotent
+            after = {t: r.host_for(t) for t in tenants}
+            for t in tenants:
+                if before[t] != dead:
+                    assert after[t] == before[t], (n, dead, t)
+                else:
+                    # the displaced tenant lands on its pre-computed
+                    # rendezvous second choice, never back on the dead host
+                    assert after[t] == second[t] != dead
+            assert r.restore(dead)
+            assert not r.restore(dead)
+            assert {t: r.host_for(t) for t in tenants} == before
+
+
+def test_rendezvous_scores_pins_and_successor():
+    r = TenantHashRouter(4, pinned={7: 2})
+    th = stable_tenant_hash(7)
+    assert r.host_for(7) == 2
+    # pin to a cordoned host falls back to the rendezvous choice
+    r.cordon(2)
+    fallback = max({0, 1, 3}, key=lambda h: (rendezvous_score(th, h), h))
+    assert r.host_for(7) == fallback != 2
+    assert 2 not in r.live_hosts and not r.is_live(2)
+    r.restore(2)
+    assert r.host_for(7) == 2
+    # choices: [owner, failover alternate], both live, stable
+    for t in range(50):
+        top = r.choices(t, 2)
+        if t != 7:
+            assert top[0] == r.host_for(t)
+        assert len(set(top)) == 2
+    # successor: deterministic, live, never the dead host itself
+    for dead in range(4):
+        s = r.successor(dead)
+        assert s != dead and s in r.live_hosts
+        assert r.successor(dead) == s
+    with pytest.raises(ValueError):
+        r.restore(9)
+    one = TenantHashRouter(2)
+    one.cordon(0)
+    with pytest.raises(RuntimeError):
+        one.cordon(1)                          # never cordon the last host
+    with pytest.raises(RuntimeError):
+        one.successor(1)                       # no live successor exists
+
+
+# --- intake journal & rid dedup ------------------------------------------------
+
+class _Handle:
+    def __init__(self, done=False):
+        self._done = done
+
+    def done(self):
+        return self._done
+
+
+def test_intake_journal_pending_and_compaction():
+    j = IntakeJournal(0)
+    live = [j.record(i, f"t{i}", object(), _Handle(), "ok", 0.0)
+            for i in range(3)]
+    for i in range(70):
+        j.record(100 + i, "settled", object(), _Handle(done=True), "ok", 0.0)
+    assert j.recorded == 73
+    assert [e.rid for e in j.pending()] == [0, 1, 2]
+    assert j.pending_tenants() == {"t0", "t1", "t2"}
+    j.compact()
+    assert j.compacted == 70 and len(j.entries) == 3
+    live[0].replayed = True                    # replayed entries stop pending
+    assert [e.rid for e in j.pending()] == [1, 2]
+    snap = j.snapshot()
+    assert snap["pending"] == 2 and snap["compacted"] == 70
+
+
+def test_submit_edges_dedup_on_request_id():
+    server = CryptoServer(ServeConfig(n_c=8, max_age_s=10.0, validate=False),
+                          coscheduler=CLUSTER_COS)
+    r1 = _dil_request(1, 256)
+    r1.request_id = 5
+    assert not server.submit(r1, now=0.0).rejected
+    # a *different* request object carrying an already-seen rid is a
+    # duplicate delivery (LB retry / double replay) — rejected, not served
+    r2 = _dil_request(2, 256)
+    r2.request_id = 5
+    h2 = server.submit(r2, now=0.0)
+    assert h2.rejected and h2.decision.reason == "duplicate"
+    # batch edge: seen rid, fresh rid, and an intra-batch repeat
+    r3, r4, r5 = (_dil_request(t, 256) for t in (3, 4, 5))
+    r3.request_id, r4.request_id, r5.request_id = 5, 6, 6
+    h3, h4, h5 = server.submit_many([r3, r4, r5], now=0.001)
+    assert h3.rejected and h3.decision.reason == "duplicate"
+    assert not h4.rejected
+    assert h5.rejected and h5.decision.reason == "duplicate"
+    by = server.telemetry.snapshot()["admission"]["by_reason"]
+    assert by["duplicate"] == 3
+
+
+def test_replay_admitted_is_idempotent_and_skips_settled():
+    dead = CryptoServer(ServeConfig(n_c=8, max_age_s=10.0, validate=False),
+                        coscheduler=CLUSTER_COS)
+    survivor = CryptoServer(ServeConfig(n_c=8, max_age_s=10.0,
+                                        validate=False),
+                            coscheduler=CLUSTER_COS)
+    reqs = [_dil_request(t, 256) for t in (1, 2, 3)]
+    for i, r in enumerate(reqs):
+        r.request_id = 100 + i
+    handles = [dead.submit(r, now=0.0) for r in reqs]
+    entries = list(zip(reqs, handles))
+    assert survivor.replay_admitted(entries, 0.01) == (3, 0)
+    # second delivery of the same journal slice is fully deduped
+    assert survivor.replay_admitted(entries, 0.02) == (0, 3)
+    survivor.drain(0.03)
+    assert all(h.done() and not h.rejected for h in handles)
+    # settled entries are skipped outright on a later (cascade) replay
+    third = CryptoServer(ServeConfig(n_c=8, max_age_s=10.0, validate=False),
+                         coscheduler=CLUSTER_COS)
+    assert third.replay_admitted(entries, 0.04) == (0, 3)
+
+
+# --- gather-ring rescue --------------------------------------------------------
+
+def test_recover_inflight_rescues_launched_groups():
+    """Async-pipeline launches the dead host never gathered are materialised
+    at cordon — results recovered, not recomputed."""
+    cos = SliceCoScheduler()
+    server = CryptoServer(ServeConfig(n_c=1, max_age_s=10.0, validate=False,
+                                      async_pipeline=True),
+                          coscheduler=cos)
+    reqs = [_dil_request(t, 64) for t in (1, 2)]
+    handles = [server.submit(r, now=0.0) for r in reqs]
+    assert server.inflight_groups > 0          # launched, not yet gathered
+    unresolved = [h for h in handles if not h.done()]
+    assert unresolved
+    assert server.recover_inflight(0.001) == len(unresolved)
+    assert server.inflight_groups == 0
+    for r, h in zip(reqs, handles):
+        assert h.done() and not h.rejected
+        iso = np.zeros((1, 64), np.uint32)
+        iso[0, : r.degree] = r.coeffs
+        np.testing.assert_array_equal(
+            h.result(), WK.DilithiumEngine(64).oracle_np(iso)[0])
+
+
+# --- limbo & pause semantics ---------------------------------------------------
+
+def test_dead_host_limbo_delivers_at_cordon():
+    cfg = ClusterConfig(n_hosts=2, fault_plan="kill@0.0005:h1",
+                        serve=ServeConfig(n_c=8, max_age_s=10.0,
+                                          validate=False))
+    cluster = ClusterServer(cfg, coscheduler_factory=lambda h: CLUSTER_COS)
+    fo = cluster.failover
+    t0 = _tenant_on_host(cluster.router, 0)
+    t1 = _tenant_on_host(cluster.router, 1)
+    assert not cluster.submit(_dil_request(t0, 256), now=0.0).rejected
+    # t=0.001: the kill has applied but silence (1 ms) is inside the 4 ms
+    # bound — the owner is dead yet uncordoned, so the request parks in the
+    # LB's limbo retry queue instead of being served or rejected.
+    h_limbo = cluster.submit(_dil_request(t1, 256), now=0.001)
+    assert fo.state[1] == "dead"
+    assert not h_limbo.done() and not h_limbo.rejected
+    assert len(fo.limbo) == 1 and fo.lost() == 1   # recoverable, unsettled
+    # t=0.006: silence crosses the bound on this tick → cordon delivers the
+    # limbo queue through normal admission on the post-cordon owner.
+    cluster.pump(0.006)
+    assert 1 in fo.cordoned
+    assert fo.limbo_delivered == 1 and not fo.limbo
+    assert fo.lost() == 0
+    assert not h_limbo.rejected
+    assert cluster.hosts[0].batcher.depth == 2
+    cluster.drain(0.01)
+    assert h_limbo.done() and not h_limbo.rejected
+    ev = [e for e in fo.events if e["kind"] == "cordon"]
+    assert len(ev) == 1 and ev[0]["cause"] == "gossip_silence"
+    assert ev[0]["limbo_delivered"] == 1
+
+
+def test_pause_cordons_reroute_only_and_keeps_serving():
+    cfg = ClusterConfig(n_hosts=2,
+                        fault_plan="pause@0.0005:h1,recover@0.008:h1",
+                        serve=ServeConfig(n_c=8, max_age_s=10.0,
+                                          validate=False))
+    cluster = ClusterServer(cfg, coscheduler_factory=lambda h: CLUSTER_COS)
+    fo = cluster.failover
+    t1 = _tenant_on_host(cluster.router, 1)
+    t1b = _tenant_on_host(cluster.router, 1, skip={t1})   # pre-cordon pick
+    held = cluster.submit(_dil_request(t1, 256), now=0.0)
+    cluster.pump(0.001)                       # applies the pause
+    assert fo.state[1] == "paused"
+    cluster.pump(0.006)                       # silence crosses → cordon
+    ev = [e for e in fo.events if e["kind"] == "cordon"]
+    assert len(ev) == 1 and ev[0]["mode"] == "reroute_only"
+    assert ev[0]["replayed"] == 0 and fo.replayed == 0
+    # a paused host keeps its rows (no replay), new arrivals re-route
+    assert cluster.hosts[1].batcher.depth == 1
+    rerouted = cluster.submit(_dil_request(t1b, 256), now=0.0065)
+    assert not rerouted.rejected
+    assert cluster.hosts[0].batcher.depth == 1
+    cluster.pump(0.009)                       # recover: rejoin, state intact
+    assert fo.state[1] == "serving" and not fo.cordoned
+    assert cluster.router.live_hosts == (0, 1)
+    cluster.drain(0.01)
+    assert held.done() and rerouted.done() and fo.lost() == 0
+
+
+# --- transient load shedding ---------------------------------------------------
+
+def test_shed_watermark_sticky_sheds_and_p2c_diverts():
+    probe = TenantHashRouter(3)
+    owner = probe.host_for(0)
+    cfg = ClusterConfig(n_hosts=3, pinned={999: owner}, shed_watermark=0.5,
+                        serve=ServeConfig(n_c=16, max_age_s=10.0,
+                                          validate=False, max_pending=20))
+    cluster = ClusterServer(cfg, coscheduler_factory=lambda h: CLUSTER_COS)
+    fo = cluster.failover
+    # 12 pending rows on the owner (> watermark 0.5 × 20 = 10), from the
+    # sticky tenant; the t=0.01 tick republishes that depth as the digest.
+    for _ in range(12):
+        assert not cluster.submit(_dil_request(0, 256), now=0.0).rejected
+    fo._transient_until = 1.0                 # as _cordon would have set it
+    shed = cluster.submit(_dil_request(0, 256), now=0.01)
+    assert shed.rejected and shed.decision.reason == "shed"
+    assert shed.decision.retry_after_s == pytest.approx(1.0 - 0.01)
+    # pinned tenants are sticky too — never split across hosts mid-transient
+    pinned = cluster.submit(_dil_request(999, 256), now=0.0101)
+    assert pinned.rejected and pinned.decision.reason == "shed"
+    # a non-sticky tenant of the saturated owner diverts power-of-two to
+    # its rendezvous alternate (shallow digest) instead of shedding
+    t_b = _tenant_on_host(cluster.router, owner, skip={0, 999})
+    second = [h for h in cluster.router.choices(t_b, 2) if h != owner][0]
+    diverted = cluster.submit(_dil_request(t_b, 256), now=0.0102)
+    assert not diverted.rejected
+    assert cluster.hosts[second].batcher.depth == 1
+    assert fo.sheds == 2 and fo.diverted == 1
+    by = cluster.hosts[owner].telemetry.snapshot()["admission"]["by_reason"]
+    assert by["shed"] == 2
+    snap = cluster.snapshot()["failover"]
+    assert snap["sheds"] == 2 and snap["diverted"] == 1
+    assert snap["transient_until"] == 1.0
+    # outside the transient window the watermark is inert
+    late = cluster.submit(_dil_request(0, 256), now=2.0)
+    assert not late.rejected
+
+
+# --- chaos parity ---------------------------------------------------------------
+
+@pytest.mark.parametrize("n_hosts", [2, 4])
+def test_kill_recover_chaos_matches_no_failure_replay(n_hosts):
+    """Acceptance: kill 1 of N hosts mid-trace (recover later); per-tenant
+    results are bit-for-bit those of the identical no-failure run, nothing
+    is lost or double-served, and the cordon was silence-driven."""
+    base, _, _ = serve_crypto_cluster(
+        hosts=n_hosts, coscheduler_factory=lambda h: CLUSTER_COS, **CHAOS_KW)
+    chaos, snap, _ = serve_crypto_cluster(
+        hosts=n_hosts, coscheduler_factory=lambda h: CLUSTER_COS,
+        fault_plan=CHAOS_PLAN, **CHAOS_KW)
+    assert set(chaos.outputs) == set(base.outputs)
+    for tid, row in base.outputs.items():
+        np.testing.assert_array_equal(chaos.outputs[tid], row)
+    fo = snap["failover"]
+    s = fo["summary"]
+    assert s["kills"] == 1 and s["recovers"] == 1
+    assert s["cordons_by_cause"].get("gossip_silence", 0) >= 1
+    assert s["replayed"] > 0 and s["deduped"] == 0
+    assert fo["lost"] == 0 and fo["limbo_pending"] == 0
+    assert fo["host_states"] == {h: "serving" for h in range(n_hosts)}
+    assert snap["routing"]["live_hosts"] == list(range(n_hosts))
+    assert snap["drain_barrier"]["complete"]
+    assert snap["drain_barrier"]["serving_hosts"] == n_hosts
+    assert summarize_failover(fo["events"]) == s
+
+
+def test_chaos_trace_validates_and_silence_alert_fires_and_resolves(tmp_path):
+    """The traced chaos run exports a causally-valid Perfetto trace in which
+    gossip_silence fires during the outage and resolves after rejoin, and
+    the fleet metrics carry the failover series."""
+    trace_path = tmp_path / "chaos_trace.json"
+    metrics_path = tmp_path / "chaos_metrics.prom"
+    _, snap, _ = serve_crypto_cluster(
+        hosts=2, coscheduler_factory=lambda h: CLUSTER_COS,
+        fault_plan=CHAOS_PLAN, trace_out=str(trace_path),
+        metrics_out=str(metrics_path),
+        telemetry_out=str(tmp_path / "chaos_telemetry.json"), **CHAOS_KW)
+    assert snap["failover"]["lost"] == 0
+    report = validate_chrome_trace(str(trace_path))
+    assert report["requests"] > 0
+    with open(trace_path) as f:
+        names = [ev["name"] for ev in json.load(f)["traceEvents"]]
+    assert "fault:kill" in names and "fault:recover" in names
+    assert "failover:h1" in names
+    assert "alert_firing:gossip_silence" in names
+    assert "alert_resolved:gossip_silence" in names
+    text = metrics_path.read_text()
+    assert "repro_cluster_replayed_total" in text
+    assert "repro_cluster_sheds_total" in text
+
+
+# --- mid-drain failure ----------------------------------------------------------
+
+@pytest.mark.parametrize("n_hosts", [2, 4])
+def test_drain_barrier_completes_with_mid_barrier_kill(n_hosts):
+    """A kill scripted at exactly the drain instant lands between quiesce
+    and flush; the dead host's journal replays onto the already-draining
+    survivors and the barrier still resolves every admitted request."""
+    cfg = ClusterConfig(
+        n_hosts=n_hosts,
+        fault_plan=FaultPlan([FaultEvent(0.001, "kill", 1)]),
+        serve=ServeConfig(n_c=8, max_age_s=10.0, validate=False))
+    cluster = ClusterServer(cfg, coscheduler_factory=lambda h: CLUSTER_COS)
+    handles, victims = [], 0
+    seen = set()
+    for host in range(n_hosts):
+        for _ in range(2):
+            tid = _tenant_on_host(cluster.router, host, skip=seen)
+            seen.add(tid)
+            handles.append(cluster.submit(_dil_request(tid, 256), now=0.0))
+            victims += host == 1
+    assert all(not h.rejected for h in handles)
+    flushed = cluster.drain(0.001)
+    assert flushed > 0 and cluster.drained
+    assert all(h.done() and not h.rejected for h in handles)
+    fo = cluster.failover
+    ev = [e for e in fo.events if e["kind"] == "cordon"]
+    assert len(ev) == 1 and ev[0]["cause"] == "drain_probe"
+    assert fo.replayed == victims and fo.lost() == 0
+    bar = cluster.snapshot()["drain_barrier"]
+    assert bar["complete"] and bar["hosts"] == n_hosts
+    assert bar["serving_hosts"] == n_hosts - 1
+    assert bar["inflight_groups"] == 0

@@ -243,6 +243,58 @@ def test_submit_many_matches_per_request_submit():
             == s_loop.telemetry.snapshot()["admission"]["by_reason"])
 
 
+# --- satellite bugfix: failover replay must not re-charge admission -------------
+
+def test_replay_bypasses_admission_and_leaves_bucket_levels_identical():
+    """A replayed request was admitted and token-charged once, on the host
+    that died — re-entering it on the survivor must not touch the
+    survivor's token buckets or SLO gate.  Pinned by comparing the
+    survivor's columnar bucket levels bit-for-bit against a scalar oracle
+    controller that only ever saw the normal (non-replay) traffic."""
+    kw = dict(n_c=4, max_age_s=10.0, tenant_rate_hz=4.0, tenant_burst=2.0)
+    survivor = _server(**kw)                       # columnar default
+    oracle = AdmissionController(columnar=False, tenant_rate_hz=4.0,
+                                 tenant_burst=2.0)
+    # normal traffic on the survivor, mirrored into the oracle
+    for i, t in enumerate((0.0, 0.125, 0.25)):
+        req = _dil(i % 2, 64, t)
+        assert not survivor.submit(req, now=t).rejected
+        assert oracle.admit(req, t, pending=0).admitted
+    # a dead peer's journal: admitted there, never seen here.  The oracle
+    # deliberately never sees these — that is the contract under test.
+    dead = _server(**kw)
+    entries = []
+    for i, t in enumerate((0.05, 0.1)):
+        req = _dil(i % 2, 64, t, coeffs=np.asarray(
+            RNG.integers(0, F.DILITHIUM_Q, 64, dtype=np.uint64), np.uint32))
+        req.request_id = 1000 + i
+        h = dead.submit(req, now=t)
+        assert not h.rejected
+        entries.append((req, h))
+    replayed, deduped = survivor.replay_admitted(entries, 0.3)
+    assert (replayed, deduped) == (2, 0)
+    for tid in (0, 1):
+        assert survivor.admission.bucket_level(tid, 0.3) == \
+            oracle.bucket_level(tid, 0.3)
+    # replay is visible in telemetry but not in the token accounting
+    by_reason = survivor.telemetry.snapshot()["admission"]["by_reason"]
+    assert by_reason["replayed"] == 2
+    # later normal traffic is charged normally, still bit-identical
+    req = _dil(0, 64, 0.5)
+    d_srv = survivor.submit(req, now=0.5)
+    d_orc = oracle.admit(req, 0.5, pending=0)
+    assert d_srv.rejected == (not d_orc.admitted)
+    assert survivor.admission.bucket_level(0, 0.5) == \
+        oracle.bucket_level(0, 0.5)
+    # idempotence: a second delivery of the same journal dedups entirely
+    # and still leaves the buckets untouched
+    assert survivor.replay_admitted(entries, 0.6) == (0, 2)
+    assert survivor.admission.bucket_level(1, 0.6) == \
+        oracle.bucket_level(1, 0.6)
+    survivor.drain(1.0)
+    dead.drain(1.0)
+
+
 # --- satellite bugfix: pending_load sees held + in-flight rows ------------------
 
 def test_pending_load_counts_inflight_ring():

@@ -203,7 +203,7 @@ def test_default_rule_sets_cover_the_contracted_signals():
     assert serve == {"slo_burn", "p99_latency", "m_occupancy_floor",
                      "arithmetic_stall_share"}
     cluster = {r.name for r in default_cluster_rules(staleness_bound_s=0.004)}
-    assert cluster == {"gossip_silence", "gossip_staleness"}
+    assert cluster == {"gossip_silence", "gossip_staleness", "failover_shed"}
 
 
 def test_merge_alert_sections_counts_firing_hosts():
@@ -363,6 +363,51 @@ def test_gossip_silence_alert_senses_a_dead_host():
     cluster.alerts.evaluate(0.0205)
     assert cluster.alerts.state("gossip_silence") == "inactive"
     assert cluster.alerts.snapshot()["rules"]["gossip_silence"]["resolved"] == 1
+
+
+def test_silence_survives_digest_prune_until_republish():
+    """Regression: ``cluster_view``'s staleness prune drops a dead host's
+    *digest*, but its publish silence must keep growing — ``gossip_silence``
+    stays firing after the prune and resolves only on an actual republish.
+    (The bug mode: pruning ``_last_pub`` alongside ``_digests`` would make a
+    cordoned host read as healthy one GC later.)"""
+    serve = _cfg(n_c=4, max_age_s=0.004)
+    cluster = ClusterServer(
+        ClusterConfig(n_hosts=2, gossip_period_s=0.002, serve=serve),
+        coscheduler_factory=lambda h: COS)
+    bus = cluster.gossip
+    bus.publish(0, 3, 0.0)
+    bus.publish(1, 3, 0.0)
+    bound = bus.staleness_bound_s
+    # age host 1's digest past the bound and force the prune via a view read
+    t = bound + 0.001
+    bus.publish(0, 3, t)
+    bus.cluster_view(0, 3, t)
+    assert bus.pruned_digests == 1
+    assert 1 not in bus._digests                  # digest gone...
+    assert bus.silence_s(t)[1] == pytest.approx(t)   # ...silence intact
+    cluster.metrics.scrape(t)
+    cluster.alerts.evaluate(t)
+    assert cluster.alerts.state("gossip_silence") == "firing"
+    # silence keeps growing across later scrapes — still firing, long after
+    # the digest was garbage-collected
+    for k in (2.0, 4.0, 8.0):
+        tk = bound * k + 0.001
+        bus.maybe_publish(0, 3, tk)
+        cluster.metrics.scrape(tk)
+        cluster.alerts.evaluate(tk)
+        assert cluster.alerts.state("gossip_silence") == "firing"
+        assert bus.silence_s(tk)[1] == pytest.approx(tk)
+    # an actual republish (the rejoin announce) is what resolves it
+    t_back = bound * 8.0 + 0.002
+    bus.publish(1, 3, t_back)
+    assert bus.revives == 1                       # pruned → publishing again
+    cluster.metrics.scrape(t_back + 0.001)
+    cluster.alerts.evaluate(t_back + 0.001)
+    assert cluster.alerts.state("gossip_silence") == "inactive"
+    assert cluster.alerts.snapshot()[
+        "rules"]["gossip_silence"]["resolved"] == 1
+    assert bus.snapshot()["revives"] == 1
 
 
 # --- controller flight recorder ------------------------------------------------
