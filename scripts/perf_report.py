@@ -132,6 +132,16 @@ def diff_records(base: dict, cand: dict, threshold: float = 0.2) -> dict:
             rows.append({"config": config, "status": "missing-in-candidate",
                          "base_rows_per_s": bp["rows_per_s"]})
             continue
+        # device-parallel points stamp the device_count they ran under; a
+        # rows/s delta across different device counts is a topology change,
+        # not a regression — report it, never gate on it
+        if bp.get("device_count") != cp.get("device_count"):
+            rows.append({"config": config, "status": "incomparable",
+                         "base_rows_per_s": bp["rows_per_s"],
+                         "cand_rows_per_s": cp["rows_per_s"],
+                         "base_device_count": bp.get("device_count"),
+                         "cand_device_count": cp.get("device_count")})
+            continue
         delta = cp["rows_per_s"] / bp["rows_per_s"] - 1.0
         row = {"config": config, "status": "ok",
                "base_rows_per_s": bp["rows_per_s"],
@@ -164,6 +174,10 @@ def print_diff(report: dict):
         elif row["status"] == "new-in-candidate":
             print(f"  {row['config']:<28} new config "
                   f"({row['cand_rows_per_s']:.0f} rows/s)")
+        elif row["status"] == "incomparable":
+            print(f"  {row['config']:<28} WARNING incomparable: measured "
+                  f"under {row['base_device_count']} vs "
+                  f"{row['cand_device_count']} devices — not gated")
         else:
             marker = "  REGRESSION" if row["status"] == "regression" else ""
             print(f"  {row['config']:<28} {row['base_rows_per_s']:10.0f} → "
@@ -279,6 +293,74 @@ def check_frontier(args) -> int:
     return 0
 
 
+# --- device-parallel scaling acceptance gate ----------------------------------
+
+def check_scaling(args) -> int:
+    """Acceptance gate on the committed device-parallel scaling points
+    (``bench_cluster --device-parallel``): for every rate swept, the point
+    at the largest host count must show a projected fleet rows/s at least
+    ``--scaling-floor`` times the single-host baseline measured in the same
+    sweep.  Like the frontier gate, this reads the committed record (or
+    ``--candidate``) — it checks the claims the repo ships, it does not
+    re-measure."""
+    if args.candidate:
+        if not os.path.exists(args.candidate):
+            print(f"candidate record {args.candidate} does not exist",
+                  file=sys.stderr)
+            return 2
+        doc, origin = load_record(args.candidate), args.candidate
+    else:
+        doc = load_committed_record(args.bench, args.baseline_rev)
+        origin = f"{args.baseline_rev}:BENCH_{args.bench}.json"
+        if doc is None:
+            print(f"no committed BENCH_{args.bench}.json at "
+                  f"{args.baseline_rev}", file=sys.stderr)
+            return 2
+    pts = [p for p in doc["points"] if p.get("device_parallel")]
+    print(f"=== device-scaling gate on {origin} "
+          f"(max-N speedup ≥ {args.scaling_floor:g}x) ===")
+    if not pts:
+        print("FAIL: record has no device-parallel points — run "
+              "bench_cluster --device-parallel and commit them",
+              file=sys.stderr)
+        return 1
+    by_rate: dict = {}
+    for p in pts:
+        by_rate.setdefault(p.get("rate_hz"), []).append(p)
+    failures = 0
+    for rate in sorted(by_rate, key=lambda r: r or 0):
+        sweep = sorted(by_rate[rate], key=lambda p: p.get("hosts", 0))
+        base = next((p for p in sweep if p.get("hosts") == 1), None)
+        if base is None:
+            print(f"  rate {rate}: FAIL no single-host baseline point in "
+                  f"the sweep")
+            failures += 1
+            continue
+        for p in sweep:
+            speedup = (p["rows_per_s"] / base["rows_per_s"]
+                       if base["rows_per_s"] > 0 else 0.0)
+            print(f"  {p['config']:<26} hosts={p.get('hosts'):>2} "
+                  f"devices={p.get('distinct_devices'):>2} "
+                  f"{p['rows_per_s']:>10,.0f} rows/s  x{speedup:.2f}")
+        top = sweep[-1]
+        speedup = (top["rows_per_s"] / base["rows_per_s"]
+                   if base["rows_per_s"] > 0 else 0.0)
+        if top.get("hosts", 0) <= 1:
+            print(f"  rate {rate}: FAIL sweep never leaves one host")
+            failures += 1
+        elif speedup < args.scaling_floor:
+            print(f"  rate {rate}: FAIL x{speedup:.2f} at "
+                  f"hosts={top.get('hosts')} is below the "
+                  f"{args.scaling_floor:g}x floor")
+            failures += 1
+    if failures:
+        print(f"FAIL: {failures} device-parallel sweep(s) below the "
+              f"scaling floor", file=sys.stderr)
+        return 1
+    print(f"{len(by_rate)} device-parallel sweep(s) meet the scaling floor")
+    return 0
+
+
 # --- legacy §Perf artifact report ---------------------------------------------
 
 def load(arch, shape, mesh="single", tag=""):
@@ -354,6 +436,13 @@ def main() -> int:
     ap.add_argument("--frontier-speedup-floor", type=float, default=5.0,
                     help="minimum committed columnar-vs-scalar speedup per "
                          "frontier point")
+    ap.add_argument("--check-scaling", action="store_true",
+                    help="gate the committed device-parallel points "
+                         "(max-N projected rows/s vs the single-host "
+                         "baseline) instead of diffing rows_per_s")
+    ap.add_argument("--scaling-floor", type=float, default=1.5,
+                    help="minimum speedup at the largest host count of "
+                         "each device-parallel sweep")
     ap.add_argument("--legacy-artifacts", action="store_true",
                     help="print the §Perf roofline artifact report instead")
     args = ap.parse_args()
@@ -363,6 +452,11 @@ def main() -> int:
             ap.error("--check-frontier needs --bench (which BENCH record "
                      "holds the frontier points, e.g. 'serve')")
         return check_frontier(args)
+    if args.check_scaling:
+        if args.bench is None:
+            ap.error("--check-scaling needs --bench (which BENCH record "
+                     "holds the device-parallel points, e.g. 'cluster')")
+        return check_scaling(args)
     if args.bench is None and args.candidate is not None:
         ap.error("--candidate needs --bench (which BENCH record to diff); "
                  "refusing to silently fall back to the artifact report")

@@ -42,8 +42,10 @@ from repro.obs.alerts import AlertEngine, default_cluster_rules
 from repro.obs.export import write_chrome_trace, write_text
 from repro.obs.metrics import MetricsRegistry, expose_registries
 from repro.obs.tracing import Tracer
+from repro.core.scheduler.coscheduler import partition_devices
 from repro.serve.server import (CryptoServer, ResponseHandle, ServeConfig,
                                 coscheduler_from_config)
+from repro.serve.telemetry import DispatchOverlapAuditor
 from repro.cluster.failover import FailoverCoordinator, FaultPlan
 from repro.cluster.gossip import GossipBus
 from repro.cluster.router import TenantHashRouter
@@ -68,6 +70,13 @@ class ClusterConfig:
     # (default) never sheds.
     shed_watermark: float | None = None
     shed_transient_s: float | None = None  # None → 2 × staleness bound
+    # Device-parallel fleet: partition the process's JAX devices across the
+    # host slices (coscheduler.partition_devices) and pin each host's
+    # compiled programs, operands, and twiddle planes to its own slice, so
+    # host i's launches queue behind host i's — not the whole fleet's.
+    # False (default) keeps the single-queue simulated mode, the
+    # deterministic oracle device mode is proven bit-for-bit against.
+    device_parallel: bool = False
     serve: ServeConfig = dataclasses.field(default_factory=ServeConfig)
 
 
@@ -87,14 +96,30 @@ class ClusterServer:
         self.gossip = GossipBus(cfg.n_hosts, period_s=cfg.gossip_period_s,
                                 staleness_factor=cfg.gossip_staleness_factor)
         self.hosts: list[CryptoServer] = []
+        # Device partition: host h's slice of the process's devices (None
+        # columns in simulated mode).  A coscheduler_factory overrides cos
+        # construction entirely — a device-parallel factory is expected to
+        # pin its own devices (the bench shares one pinned co-scheduler per
+        # device to keep compile time linear in devices, not hosts).
+        self.device_partition = (partition_devices(cfg.n_hosts)
+                                 if cfg.device_parallel else None)
+        # One fleet-wide launch-overlap auditor across every host: the
+        # device-pinning audit trail (per-host device ids, launch
+        # concurrency, cross-host queue sharing) in snapshot().
+        self.dispatch_audit = DispatchOverlapAuditor()
         for h in range(cfg.n_hosts):
             if coscheduler_factory is not None:
                 cos = coscheduler_factory(h)
             else:
                 # Each host gets the full dispatch fast path (super-batching,
                 # row ladder, donation) from the shared serve config.
-                cos = coscheduler_from_config(cfg.serve, host=h)
+                cos = coscheduler_from_config(
+                    cfg.serve, host=h,
+                    devices=(self.device_partition[h]
+                             if self.device_partition else None))
             srv = CryptoServer(cfg.serve, coscheduler=cos)
+            srv.host_id = h
+            srv.dispatch_auditor = self.dispatch_audit
             srv.cluster_depth_fn = self._make_depth_fn(h)
             if srv.tracer is not None and srv.tracer.host is None:
                 # A factory-built co-scheduler may not carry its host id;
@@ -428,6 +453,14 @@ class ClusterServer:
             },
             "failover": self.failover.snapshot(),
             "drain_barrier": self._barrier,
+            "devices": {
+                "device_parallel": bool(self.config.device_parallel),
+                "per_host": [list(srv.cos.device_ids())
+                             for srv in self.hosts],
+                "distinct": len({d for srv in self.hosts
+                                 for d in srv.cos.device_ids()}),
+            },
+            "dispatch_overlap": self.dispatch_audit.snapshot(),
         }
         if self.metrics is not None:
             out["cluster_metrics"] = self.metrics.snapshot()

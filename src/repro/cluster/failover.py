@@ -371,10 +371,16 @@ class FailoverCoordinator:
                     args={"mode": mode, "recovered": recovered,
                           "replayed": replayed, "deduped": deduped,
                           "limbo_delivered": delivered})
+        # Forensics for device-parallel fleets: which device slice the dead
+        # host's in-flight arrays lived on.  The gather-ring rescue above
+        # works regardless — jax materialises committed arrays from any
+        # device — but post-mortems need the pin to reason about what the
+        # rescue actually pulled across.
         self._event(now, "cordon", host, cause=cause, mode=mode,
                     recovered=recovered, replayed=replayed,
                     deduped=deduped, limbo_delivered=delivered,
-                    silence_s=silence)
+                    silence_s=silence,
+                    device_ids=list(cluster.hosts[host].cos.device_ids()))
 
     def _replay(self, host: int, now: float) -> tuple[int, int]:
         cluster = self.cluster

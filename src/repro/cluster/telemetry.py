@@ -184,6 +184,13 @@ def _merge_dispatch(snaps: list[dict]) -> dict:
             [(p.get(key, 0.0), w) for p, w in zip(parts, weights)])
     out["pad_fraction"] = (1.0 - out["live_rows"] / out["launched_rows"]
                            if out["launched_rows"] else 0.0)
+    by_device: dict = {}
+    for p in parts:
+        for dev, slot in p.get("by_device", {}).items():
+            m = by_device.setdefault(dev, {"launches": 0, "live_rows": 0})
+            m["launches"] += slot.get("launches", 0)
+            m["live_rows"] += slot.get("live_rows", 0)
+    out["by_device"] = by_device
     return out
 
 

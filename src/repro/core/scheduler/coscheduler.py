@@ -59,6 +59,76 @@ DISPATCH_LOG_MAX = 4096
 MIN_ROW_TILE = 2
 
 
+def resolve_devices(devices):
+    """Normalise a ``devices=`` spec into a list of live ``jax.Device``s.
+
+    ``None`` means "every device in the process" (today's behaviour).
+    Entries may be integer device ids or ``jax.Device`` objects; anything
+    out of range, unknown, or listed twice fails loudly here — a duplicate
+    or phantom device in a host slice's pin list would otherwise surface
+    as two hosts silently serialising on one queue (the exact failure mode
+    device pinning exists to remove).
+    """
+    all_devs = list(jax.devices())
+    if devices is None:
+        return all_devs
+    by_id = {d.id: d for d in all_devs}
+    resolved, seen = [], set()
+    for i, entry in enumerate(devices):
+        if isinstance(entry, (int, np.integer)):
+            dev = by_id.get(int(entry))
+            if dev is None:
+                raise ValueError(
+                    f"devices[{i}] = {entry} is out of range: this process "
+                    f"has {len(all_devs)} JAX device(s) (ids "
+                    f"0..{len(all_devs) - 1}); on CPU, widen the slice with "
+                    f"XLA_FLAGS --xla_force_host_platform_device_count=N "
+                    f"before the first jax use")
+        else:
+            dev = by_id.get(getattr(entry, "id", None))
+            if dev is None or dev is not entry:
+                raise ValueError(
+                    f"devices[{i}] = {entry!r} is not a device of this "
+                    f"process (jax.devices() has ids "
+                    f"0..{len(all_devs) - 1})")
+        if dev.id in seen:
+            raise ValueError(
+                f"devices[{i}] names device {dev.id} twice: a host slice "
+                f"pinned to a repeated device would share a launch queue "
+                f"with itself — each pin must be distinct")
+        seen.add(dev.id)
+        resolved.append(dev)
+    if not resolved:
+        raise ValueError("devices= must name at least one device "
+                         "(use None for the whole process)")
+    return resolved
+
+
+def partition_devices(n_parts: int, devices=None) -> list[list]:
+    """Split the process's devices into ``n_parts`` host slices.
+
+    With D ≥ n_parts devices each slice gets a contiguous near-even chunk
+    (first ``D mod n_parts`` slices get the extra device); with D <
+    n_parts, slices wrap round-robin onto single devices — hosts then
+    share queues, which the dispatch-overlap audit makes visible rather
+    than hiding.  The cluster layer uses this when ``device_parallel`` is
+    on; benches/tests call it directly to build per-device co-schedulers.
+    """
+    if n_parts < 1:
+        raise ValueError(f"partition_devices needs n_parts >= 1, "
+                         f"got {n_parts}")
+    devs = resolve_devices(devices)
+    if len(devs) >= n_parts:
+        base, extra = divmod(len(devs), n_parts)
+        out, lo = [], 0
+        for i in range(n_parts):
+            hi = lo + base + (1 if i < extra else 0)
+            out.append(devs[lo:hi])
+            lo = hi
+        return out
+    return [[devs[i % len(devs)]] for i in range(n_parts)]
+
+
 def validate_row_ladder(row_ladder) -> tuple[int, ...]:
     """Validate a compile-cache rung ladder at construction time.
 
@@ -152,12 +222,27 @@ class SliceCoScheduler:
                  kappa: int | None = None, d_tile: int | None = None,
                  merge: bool = True, row_ladder: tuple | None = None,
                  merge_rows_max: int = 128, donate: bool = False,
-                 host: int | None = None):
-        devices = jax.devices()
+                 host: int | None = None, devices=None):
+        # devices= pins this co-scheduler to an explicit device sub-slice
+        # (ints or jax.Device objects; validated by resolve_devices).  The
+        # pin is what makes a cluster host slice's launches land on *its*
+        # device instead of the process default: operands are committed via
+        # _shard, and the engine's cached twiddle planes are re-homed per
+        # co-scheduler (device_planes_for) because make_engine is shared
+        # process-wide.  devices=None keeps today's behaviour bit-for-bit.
+        self._pinned = devices is not None
+        pinned = resolve_devices(devices)
         if assignment is None:
             # default: split the slice evenly across workload classes
-            assignment = {"dilithium": devices[: max(1, len(devices) // 2)],
-                          "bn254": devices[max(1, len(devices) // 2):] or devices}
+            assignment = {"dilithium": pinned[: max(1, len(pinned) // 2)],
+                          "bn254": pinned[max(1, len(pinned) // 2):] or pinned}
+            self.devices = pinned
+        else:
+            ordered: dict[int, object] = {}
+            for devs in assignment.values():
+                for d in devs:
+                    ordered.setdefault(d.id, d)
+            self.devices = list(ordered.values())
         self.assignment = assignment
         self.accum = accum
         self.reduction = G.check_reduction(reduction)
@@ -191,6 +276,12 @@ class SliceCoScheduler:
         }
         self._engines: dict = {}
         self._jitted: dict = {}
+        # (workload, d_bucket) -> device-resident twiddle/fused planes.
+        # Engines (make_engine) are an lru-cached *process-wide* resource
+        # whose device_planes() upload lands on the default device; a pinned
+        # co-scheduler re-homes the planes onto its own mesh exactly once
+        # here, so N host slices never share one host's plane buffers.
+        self._planes: dict = {}
         # (workload, d_bucket) -> number of times XLA retraced the program.
         # Incremented inside the traced body, so cached executions leave it
         # untouched; with a row ladder the count is bounded by the ladder
@@ -209,6 +300,28 @@ class SliceCoScheduler:
     def reduction_for(self, workload: str) -> str:
         """The fold discipline this slice applies to a workload class."""
         return self.reduction_by_workload.get(workload, self.reduction)
+
+    def device_ids(self, workload: str | None = None) -> tuple[int, ...]:
+        """Device ids this co-scheduler launches on — the whole slice, or
+        one workload class's group (telemetry / placement assertions)."""
+        if workload is None:
+            return tuple(d.id for d in self.devices)
+        return tuple(d.id for d in self._meshes[workload].devices.flat)
+
+    def device_planes_for(self, workload: str, d: int):
+        """The engine's device-resident planes, re-homed onto this
+        co-scheduler's device group when pinned (passthrough otherwise —
+        the engine cache's default-device upload is already correct for an
+        unpinned slice, and re-uploading would double memory)."""
+        key = (workload, d)
+        planes = self._planes.get(key)
+        if planes is None:
+            planes = self.engine_for(workload, d).device_planes()
+            if self._pinned:
+                sharding = NamedSharding(self._meshes[workload], P())
+                planes = jax.device_put(planes, sharding)
+            self._planes[key] = planes
+        return planes
 
     def engine_for(self, workload: str, d: int):
         key = (workload, d)
@@ -273,7 +386,7 @@ class SliceCoScheduler:
         n_new = 0
         for workload, d in programs:
             key = (workload, d)
-            planes = self.engine_for(workload, d).device_planes()
+            planes = self.device_planes_for(workload, d)
             before = self.trace_counts.get(key, 0)
             for rung in rungs:
                 operand = jnp.zeros(self.operand_shape(workload, d, rung),
@@ -338,7 +451,7 @@ class SliceCoScheduler:
             operand_np = merge_operands(members, n_rows=rows)
         operand = self._shard(group.workload, jnp.asarray(operand_np))
         out = self.jitted_for(group.workload, group.d_bucket)(
-            operand, eng.device_planes())
+            operand, self.device_planes_for(group.workload, group.d_bucket))
         tr = self.tracer
         if tr is not None:
             group.lid = tr.next_id()
@@ -355,7 +468,8 @@ class SliceCoScheduler:
             "workload": group.workload, "d_bucket": group.d_bucket,
             "n_batches": len(group.members), "live_rows": group.live_rows,
             "launched_rows": int(operand_np.shape[0]),
-            "donated": self.donate, "lid": group.lid})
+            "donated": self.donate, "lid": group.lid,
+            "devices": self.device_ids(group.workload)})
         return group, eng, out
 
     def _materialise(self, group: _LaunchGroup, eng, out):

@@ -1,7 +1,8 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST be the first two lines — before ANY other import (jax locks the
-# device count on first init).
+from repro.launch.xla_env import force_host_device_count
+force_host_device_count(512)
+# ^ MUST run before ANY jax-importing line (jax locks the device count on
+# first init).  xla_env appends to a user-set XLA_FLAGS instead of
+# clobbering it, so operator-passed flags survive.
 #
 # Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell with
 # ShapeDtypeStruct inputs (no allocation), print memory/cost analysis, parse
@@ -14,6 +15,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import json
+import os
 import time
 import traceback
 

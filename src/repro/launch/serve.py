@@ -183,7 +183,8 @@ def serve_crypto_cluster(*, hosts=2, duration_s=0.05, rate_hz=2048, n_c=8,
                          deterministic_timing=False,
                          realtime=False, coscheduler_factory=None,
                          arrival_batch=None, columnar_admission=True,
-                         fault_plan=None, shed_watermark=None):
+                         fault_plan=None, shed_watermark=None,
+                         device_parallel=False):
     """Closed loop over an N-host sharded cluster: tenant-hash ingress →
     per-host admission (gossip-informed SLO gate) → per-host continuous
     batcher → co-scheduled dispatch → two-phase drain barrier → merged
@@ -225,7 +226,8 @@ def serve_crypto_cluster(*, hosts=2, duration_s=0.05, rate_hz=2048, n_c=8,
         ClusterConfig(n_hosts=hosts, gossip_period_s=gossip_period_s,
                       gossip_staleness_factor=gossip_staleness_factor,
                       pinned=pinned, fault_plan=fault_plan,
-                      shed_watermark=shed_watermark, serve=serve_cfg),
+                      shed_watermark=shed_watermark,
+                      device_parallel=device_parallel, serve=serve_cfg),
         coscheduler_factory=coscheduler_factory)
     gen = LoadGenerator(
         trace if trace is not None else
@@ -271,6 +273,12 @@ def main():
                          "transients: fraction of max-pending above which "
                          "non-sticky tenants divert (power-of-two) and "
                          "sticky ones shed")
+    ap.add_argument("--device-parallel", action="store_true",
+                    help="partition the process's JAX devices across the "
+                         "host slices and pin each host's programs/operands/"
+                         "twiddle planes to its own slice (cluster mode; on "
+                         "CPU, widen the slice with XLA_FLAGS "
+                         "--xla_force_host_platform_device_count=N first)")
     ap.add_argument("--tenant-rate", type=float, default=None,
                     help="per-tenant token-bucket rate (req/s)")
     ap.add_argument("--slo-ms", type=float, default=None,
@@ -378,7 +386,8 @@ def main():
             deterministic_timing=args.deterministic_timing,
             realtime=args.realtime, arrival_batch=args.arrival_batch,
             columnar_admission=not args.scalar_admission,
-            fault_plan=args.fault_plan, shed_watermark=args.shed_watermark)
+            fault_plan=args.fault_plan, shed_watermark=args.shed_watermark,
+            device_parallel=args.device_parallel)
         m = snap["merged"]
         served = sum(1 for h in load.handles if h.done() and not h.rejected)
         print(f"cluster[{args.hosts} hosts]: served {served}/"
@@ -404,6 +413,14 @@ def main():
               f"{bar['batches_flushed']} batches flushed, "
               f"complete={bar['complete']}, "
               f"in-flight={bar['inflight_groups']}")
+        if args.device_parallel:
+            dv, ov = snap["devices"], snap["dispatch_overlap"]
+            print(f"devices: per-host {dv['per_host']} "
+                  f"({dv['distinct']} distinct); overlap: "
+                  f"{ov['launches']} launches, concurrency "
+                  f"mean {ov['launch_concurrency_mean']:.2f} / "
+                  f"max {ov['launch_concurrency_max']}, cross-host queue "
+                  f"share {ov['cross_host_queue_share']:.3f}")
         if args.fault_plan or args.shed_watermark is not None:
             fo = snap["failover"]
             s = fo["summary"]

@@ -1,0 +1,82 @@
+"""Process-environment bootstrap for forced host (CPU) device counts.
+
+JAX reads ``XLA_FLAGS`` exactly once, when its first backend initialises,
+and locks the device count for the life of the process.  Anything that
+wants N CPU devices (the device-parallel cluster tests, ``bench_cluster
+--device-parallel``, the dry-run topology planner) therefore has to edit
+the environment *before* that first init — and has to **append** to any
+user-set ``XLA_FLAGS`` rather than clobbering it, or it silently throws
+away flags the operator passed in (the historical ``dryrun.py`` bug).
+
+This module must stay importable without importing jax: callers import it
+at the very top of their entrypoint, mutate ``os.environ``, and only then
+touch jax.  The jax-initialisation probe below inspects already-imported
+module state and never triggers an init itself.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+HOST_DEVICE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def with_host_device_count(flags: str | None, n: int) -> str:
+    """Pure string edit: return ``flags`` with any existing
+    ``--xla_force_host_platform_device_count`` token replaced by ``=n``,
+    appending one if absent.  Every other token is preserved verbatim."""
+    if n < 1:
+        raise ValueError(f"host device count must be >= 1, got {n}")
+    kept = [tok for tok in (flags or "").split()
+            if not tok.startswith(HOST_DEVICE_FLAG)]
+    kept.append(f"{HOST_DEVICE_FLAG}={n}")
+    return " ".join(kept)
+
+
+def jax_initialised() -> bool:
+    """True iff a JAX backend is already live in this process (at which
+    point ``XLA_FLAGS`` edits are inert).  Importing jax alone does not
+    initialise a backend; the first ``jax.devices()`` / jit does."""
+    jax = sys.modules.get("jax")
+    if jax is None:
+        return False
+    try:
+        bridge = sys.modules.get("jax._src.xla_bridge")
+        return bool(getattr(bridge, "_backends", None))
+    except Exception:  # pragma: no cover - defensive against jax internals
+        return False
+
+
+def force_host_device_count(n: int, *, env=None) -> str:
+    """Set ``XLA_FLAGS`` so the host platform exposes ``n`` devices,
+    preserving all other flags.  Raises ``RuntimeError`` if a JAX backend
+    already initialised with a different device count — the edit would be
+    silently ignored, which is worse than failing loudly."""
+    if env is None:
+        env = os.environ
+    if jax_initialised():
+        import jax
+        have = jax.device_count()
+        if have != n:
+            raise RuntimeError(
+                f"cannot force {n} host devices: a JAX backend is already "
+                f"initialised with {have} device(s); set XLA_FLAGS "
+                f"{HOST_DEVICE_FLAG}={n} before the first jax use")
+        return env.get("XLA_FLAGS", "")
+    flags = with_host_device_count(env.get("XLA_FLAGS"), n)
+    env["XLA_FLAGS"] = flags
+    return flags
+
+
+def maybe_force_host_device_count(n: int, *, env=None) -> bool:
+    """Best-effort variant for test modules: like
+    :func:`force_host_device_count` but returns ``False`` instead of
+    raising when jax already initialised (the caller is expected to skip
+    or degrade, e.g. via ``pytest.mark.skipif`` on ``jax.device_count()``).
+    Returns ``True`` when the environment was (re)written."""
+    if jax_initialised():
+        return False
+    if env is None:
+        env = os.environ
+    env["XLA_FLAGS"] = with_host_device_count(env.get("XLA_FLAGS"), n)
+    return True

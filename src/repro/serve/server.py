@@ -235,17 +235,19 @@ def enable_compilation_cache(cache_dir: str) -> str:
     return cache_dir
 
 
-def coscheduler_from_config(cfg: ServeConfig,
-                            host: int | None = None) -> SliceCoScheduler:
+def coscheduler_from_config(cfg: ServeConfig, host: int | None = None,
+                            devices=None) -> SliceCoScheduler:
     """The default Tier-2 co-scheduler for a serving config (shared by the
-    single-host server and the per-host construction in repro.cluster)."""
+    single-host server and the per-host construction in repro.cluster).
+    ``devices`` pins the slice to an explicit device subset (device-parallel
+    cluster mode); None keeps the whole-process default."""
     ladder = (default_row_ladder(cfg.row_ladder_max)
               if cfg.row_ladder_max else None)
     return SliceCoScheduler(
         accum=cfg.accum, reduction=cfg.reduction,
         reduction_by_workload=cfg.reduction_by_workload,
         kappa=cfg.kappa, d_tile=cfg.d_tile, merge=cfg.merge_dispatch,
-        row_ladder=ladder, donate=cfg.donate, host=host)
+        row_ladder=ladder, donate=cfg.donate, host=host, devices=devices)
 
 
 class CryptoServer:
@@ -374,6 +376,11 @@ class CryptoServer:
         # when no sufficiently fresh gossip digest exists).  The SLO gate
         # then operates on bounded-staleness *cluster* state.
         self.cluster_depth_fn = None
+        # Cluster hooks: the owning host slice's id and the fleet-shared
+        # DispatchOverlapAuditor (both set by repro.cluster; None when this
+        # server runs standalone — the hot path then pays one ``is None``).
+        self.host_id = self.cos.host
+        self.dispatch_auditor = None
         self.warm_traces = 0
         if cfg.warm_start:
             if not cfg.pad_rows and self.cos.row_ladder is None:
@@ -660,6 +667,11 @@ class CryptoServer:
         self._staged.clear()
         self._rings.clear()
         self._held.clear()
+        if self.dispatch_auditor is not None:
+            # The rings' un-gathered flights died with the host: retire them
+            # from the fleet overlap audit or its concurrency counters leak
+            # permanently-busy devices.
+            self.dispatch_auditor.on_reset(self.host_id)
         self.batcher = self._make_batcher()
         self._draining = False
 
@@ -716,7 +728,13 @@ class CryptoServer:
         if self.cos.merge:
             rows = max(rows, self.cos.merge_rows_max)
         shape = self.cos.operand_shape(batch.workload, batch.d_bucket, rows)
-        args = (jnp.zeros(shape, jnp.uint32), eng.device_planes())
+        # Operand and planes both go through the co-scheduler's placement
+        # funnel: on a pinned slice the validation trace must see committed
+        # arrays on *its* device — mixing a default-device operand with
+        # pinned planes is an XLA device-mismatch error, not a validation.
+        args = (self.cos._shard(batch.workload,
+                                jnp.zeros(shape, jnp.uint32)),
+                self.cos.device_planes_for(batch.workload, batch.d_bucket))
         donate = (0,) if self.cos.donate else ()
 
         def _e2e(operand, planes):
@@ -1062,7 +1080,10 @@ class CryptoServer:
         launch_s = time.perf_counter() - t0
         # Claim the launch records now — a peer host sharing this
         # co-scheduler may launch before we gather.
-        return flight, self.cos.drain_dispatch_log(), launch_s
+        log = self.cos.drain_dispatch_log()
+        if self.dispatch_auditor is not None:
+            self.dispatch_auditor.on_launch(self.host_id, flight, log)
+        return flight, log, launch_s
 
     def _finish(self, closed: list[ClosedBatch], flight, log: list,
                 launch_s: float, now: float):
@@ -1074,6 +1095,8 @@ class CryptoServer:
         t1 = time.perf_counter()
         results = self.cos.gather(flight)
         service_s = launch_s + time.perf_counter() - t1
+        if self.dispatch_auditor is not None:
+            self.dispatch_auditor.on_gather(flight)
         if self.config.deterministic_timing:
             # Substitute the ledger's modeled device time for the wall
             # measurement: the one wall-clock leak into the serving loop,
@@ -1156,7 +1179,8 @@ class CryptoServer:
                 launched_rows=launched,
                 m_occupancy=min(1.0, live / self.config.n_c_max),
                 m_fill=live / launched if launched else 0.0,
-                donated=entry["donated"]))
+                donated=entry["donated"],
+                devices=tuple(entry.get("devices", ()))))
             acc = class_k.get(key)
             self.ledger.observe_launch(
                 workload=entry["workload"], d=entry["d_bucket"],

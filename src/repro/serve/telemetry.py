@@ -167,6 +167,8 @@ class DispatchRecord:
     m_occupancy: float       # live_rows / n_c_max — post-merge M occupancy
     m_fill: float            # live_rows / launched_rows — ladder-pad density
     donated: bool = False    # operand buffer donated to the program
+    devices: tuple = ()      # device ids the launch was enqueued on (empty
+                             # for records predating device pinning)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -340,6 +342,17 @@ class Telemetry:
                            if n_d else 0.0,
             "donated": sum(1 for r in self.dispatches if r.donated),
         }
+        # Per-device launch census (device-parallel fleets): which device
+        # ids this host's programs were enqueued on, and how many live rows
+        # each carried — the attribution basis for per-device busy time.
+        by_device: dict[str, dict] = {}
+        for r in self.dispatches:
+            for dev in r.devices:
+                slot = by_device.setdefault(
+                    str(dev), {"launches": 0, "live_rows": 0})
+                slot["launches"] += 1
+                slot["live_rows"] += r.live_rows
+        dispatch["by_device"] = by_device
         admitted = self.admission_counts.get("ok", 0)
         rejected = sum(v for k, v in self.admission_counts.items() if k != "ok")
         extra = {name: provider() for name, provider in self._sections.items()}
@@ -370,3 +383,87 @@ class Telemetry:
         with open(path, "w") as f:
             json.dump(snap, f, indent=2, sort_keys=True)
         return snap
+
+
+class DispatchOverlapAuditor:
+    """Fleet-level launch-overlap audit for device-parallel clusters.
+
+    The cluster layer attaches one auditor across all host slices; each
+    host reports program launches (``on_launch``) and retirements
+    (``on_gather`` / ``on_reset``).  Every quantity is computed from the
+    *event order* of launches on the shared virtual clock, so the audit is
+    deterministic and testable:
+
+    * ``launch_concurrency`` — distinct devices with un-gathered launches
+      at each launch instant (mean/max).  >1 means host i's launches
+      genuinely overlap host j's on separate queues.
+    * ``cross_host_queue_share`` — fraction of launches enqueued while
+      another host already had an un-gathered launch on the *same*
+      device.  High in simulated shared-device mode; exactly 0.0 by
+      construction when every host is pinned to its own device.
+    """
+
+    def __init__(self):
+        self._inflight: dict[int, list] = {}   # id(flight) -> [(host, devs)]
+        self.launches = 0
+        self.flights = 0
+        self.cross_host_shared = 0
+        self._concurrency_sum = 0
+        self.concurrency_max = 0
+        self.per_host_devices: dict = {}       # host -> set of device ids
+
+    def on_launch(self, host, flight, entries: list[dict]):
+        """Register one ``launch_mixed`` flight: ``entries`` are the
+        co-scheduler's dispatch-log records for exactly this flight."""
+        units = []
+        for e in entries:
+            devs = frozenset(e.get("devices", ()))
+            self.launches += 1
+            self.per_host_devices.setdefault(host, set()).update(devs)
+            for others in self._inflight.values():
+                if any(h != host and (devs & d) for h, d in others):
+                    self.cross_host_shared += 1
+                    break
+            units.append((host, devs))
+        if units:
+            self.flights += 1
+            self._inflight[id(flight)] = units
+            busy = set()
+            for u in self._inflight.values():
+                for _, devs in u:
+                    busy |= devs
+            self._concurrency_sum += len(busy)
+            self.concurrency_max = max(self.concurrency_max, len(busy))
+
+    def on_gather(self, flight):
+        self._inflight.pop(id(flight), None)
+
+    def on_reset(self, host):
+        """A host was torn down without gathering (failover reset): its
+        in-flight launches are gone, not merely late — drop them so the
+        concurrency audit does not leak permanently-busy devices."""
+        for key, units in list(self._inflight.items()):
+            kept = [(h, d) for h, d in units if h != host]
+            if kept:
+                self._inflight[key] = kept
+            else:
+                del self._inflight[key]
+
+    def snapshot(self) -> dict:
+        n = self.launches
+        return {
+            "launches": n,
+            "flights": self.flights,
+            "cross_host_shared_launches": self.cross_host_shared,
+            "cross_host_queue_share": (self.cross_host_shared / n) if n
+                                      else 0.0,
+            "launch_concurrency_mean": (
+                self._concurrency_sum / self.flights) if self.flights
+                else 0.0,
+            "launch_concurrency_max": self.concurrency_max,
+            "inflight_launches": sum(len(u) for u in
+                                     self._inflight.values()),
+            "per_host_devices": {str(h): sorted(d) for h, d in
+                                 sorted(self.per_host_devices.items(),
+                                        key=lambda kv: str(kv[0]))},
+        }
